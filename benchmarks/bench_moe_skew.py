@@ -1,0 +1,67 @@
+"""Beyond-paper transfer (DESIGN.md §2): SharesSkew expert dispatch.
+
+Routes a Zipf-skewed token batch through a MoE layer twice: with the plain
+capacity-factor router (extra_slots=0 — tokens to hot experts get dropped)
+and with SharesSkew replica slots (hot experts = heavy hitters get replica
+grid slots).  Reports drop rates and slot-load imbalance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.moe import init_moe_block, moe_ffn
+
+from .common import emit
+
+
+def main() -> None:
+    cfg = dataclasses.replace(
+        get_config("qwen2-moe-a2.7b").reduced(), n_experts=16, top_k=2, d_model=64
+    )
+    key = jax.random.PRNGKey(0)
+    blk = init_moe_block(key, cfg)
+    # skew the router: bias strongly toward 2 experts (the heavy hitters)
+    bias = np.zeros((cfg.d_model, cfg.n_experts), np.float32)
+    bias[:, 0] = 0.35
+    bias[:, 3] = 0.25
+    blk["router"] = blk["router"] + jnp.asarray(bias)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 256, cfg.d_model)), jnp.float32)
+
+    _, _, base = moe_ffn(blk, x, cfg, capacity_factor=1.25, extra_slots=0,
+                         return_stats=True)
+    _, _, skew = moe_ffn(blk, x, cfg, capacity_factor=1.25, extra_slots=8,
+                         return_stats=True)
+
+    base_drop = float(base["drop_rate"])
+    skew_drop = float(skew["drop_rate"])
+    emit("moe_drop_rate_capacity_router_pct", 100 * base_drop,
+         "Zipf-skewed routing, cf=1.25")
+    emit("moe_drop_rate_sharesskew_pct", 100 * skew_drop,
+         "hot experts get replica slots (paper Ex.2 rectangle)")
+    # §Perf iteration at benchmark scale: cf=1.0 viable only with replicas
+    _, _, tight_plain = moe_ffn(blk, x, cfg, capacity_factor=1.0, extra_slots=0,
+                                return_stats=True)
+    _, _, tight_skew = moe_ffn(blk, x, cfg, capacity_factor=1.0, extra_slots=8,
+                               return_stats=True)
+    emit("moe_drop_rate_cf1.0_capacity_pct", 100 * float(tight_plain["drop_rate"]),
+         "tight capacity, no replicas")
+    emit("moe_drop_rate_cf1.0_sharesskew_pct", 100 * float(tight_skew["drop_rate"]),
+         "tight capacity + replica slots (EXPERIMENTS qwen3 iter 1)")
+    loads_b = np.asarray(base["slot_loads"], np.float64)
+    loads_s = np.asarray(skew["slot_loads"], np.float64)
+    imb_b = loads_b.max() / max(loads_b.mean(), 1e-9)
+    imb_s = loads_s.max() / max(loads_s.mean(), 1e-9)
+    emit("moe_slot_imbalance_capacity_router", imb_b, "max/mean slot load")
+    emit("moe_slot_imbalance_sharesskew", imb_s, "")
+    assert skew_drop <= base_drop, "SharesSkew must not drop more tokens"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Render the §Roofline tables from dry-run artifacts.
+
+  python -m benchmarks.report                      # print single-pod table
+  python -m benchmarks.report --mesh pod2x16x16    # multi-pod table
+  python -m benchmarks.report --write-experiments  # splice into EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+
+from .roofline import build_table, render_markdown
+
+_MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--write-experiments", action="store_true")
+    args = ap.parse_args()
+
+    md = render_markdown(build_table(args.mesh))
+    if not args.write_experiments:
+        print(md)
+        return
+    path = os.path.join(os.path.dirname(os.path.dirname(__file__)), "EXPERIMENTS.md")
+    text = open(path).read()
+    if _MARK in text:
+        # replace marker (and any previously spliced table right after it)
+        pattern = re.escape(_MARK) + r"(\n\|.*?(?:\n\|.*?)*)?"
+        text = re.sub(pattern, _MARK + "\n" + md, text, count=1)
+        open(path, "w").write(text)
+        print(f"wrote roofline table ({args.mesh}) into EXPERIMENTS.md")
+    else:
+        print("marker not found in EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

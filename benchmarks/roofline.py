@@ -1,0 +1,132 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
+artifacts (brief deliverable (g)).
+
+  compute_s    = per-device FLOPs / 197e12      (v5e bf16 peak per chip)
+  memory_s     = per-device HBM bytes / 819e9   (HBM bandwidth)
+  collective_s = per-device wire bytes / 50e9   (~ICI link bandwidth)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train; 2*N*D_tokens
+for prefill/decode.  The ratio MODEL_FLOPS / (HLO flops x chips) exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    n = cfg.n_active_params() if cfg.n_experts else cfg.n_params()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * spec.global_batch  # decode: one token per sequence
+
+
+def load_records(mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"{mesh}__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    compute_s = rec["flops"] / PEAK_FLOPS
+    memory_s = rec["hbm_bytes"] / HBM_BW
+    collective_s = rec["collective_wire_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops"] * chips
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # fraction of roofline: ideal step time (compute term at the model's
+        # useful flops) over the bound given by the dominant term
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def build_table(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for rec in load_records(mesh):
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "skipped":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "skipped": rec["reason"],
+            })
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    from .common import emit
+
+    rows = build_table("pod16x16")
+    ok = [r for r in rows if "skipped" not in r]
+    if not ok:
+        emit("roofline_rows", 0, "no dry-run artifacts yet; run repro.launch.dryrun")
+        return
+    for r in ok:
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f}",
+        )
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    emit("roofline_worst_cell", worst["roofline_fraction"],
+         f"{worst['arch']}/{worst['shape']} dom={worst['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""SharesSkew on TPU: skew-aware distributed joins + LM framework in JAX."""
+__version__ = "1.0.0"

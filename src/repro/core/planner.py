@@ -1,0 +1,151 @@
+"""SharesSkew planner (paper §4 + §5 stages 1-3).
+
+Produces a ``SharesSkewPlan``: the list of surviving residual joins, each
+with relevant sizes, a reducer budget k_J chosen so the expected
+per-reducer load is <= q, integer shares (the reducer grid), and a global
+reducer-id block.  The plan is consumed by ``repro.mapreduce.executor``
+(stage 4: tuple distribution) and by the MoE dispatch layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+import numpy as np
+
+from .dominance import share_attributes
+from .residual import (
+    Combination,
+    ORDINARY,
+    detect_heavy_hitters,
+    enumerate_combinations,
+    prune_by_subsumption,
+    relevant_sizes,
+)
+from .schema import JoinQuery
+from .shares import SharesSolution, solve_k_for_capacity, solve_shares
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualPlan:
+    """One residual join: its data slice, reducer grid and share solution."""
+
+    combo: Combination
+    sizes: dict[str, int]
+    k_budget: int  # k chosen by the capacity rule
+    solution: SharesSolution
+    reducer_offset: int  # global reducer ids [offset, offset + num_reducers)
+
+    @property
+    def grid_attrs(self) -> tuple[str, ...]:
+        """Attributes with integer share > 1, in query attribute order
+        (the dimensions of this residual's reducer grid)."""
+        return tuple(
+            a
+            for a in self.solution.cost_expr.query.attributes
+            if self.solution.int_shares.get(a, 1) > 1
+        )
+
+    @property
+    def grid_dims(self) -> tuple[int, ...]:
+        return tuple(self.solution.int_shares[a] for a in self.grid_attrs)
+
+    @property
+    def num_reducers(self) -> int:
+        return int(math.prod(self.grid_dims)) if self.grid_dims else 1
+
+    def describe(self) -> str:
+        dims = ", ".join(f"{a}:{d}" for a, d in zip(self.grid_attrs, self.grid_dims))
+        return (
+            f"residual {self.combo} sizes={self.sizes} k={self.num_reducers}"
+            f" grid=[{dims}] cost={self.solution.int_cost:.0f}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SharesSkewPlan:
+    query: JoinQuery
+    q: float  # reducer capacity
+    hh_values: dict[str, np.ndarray]
+    residuals: tuple[ResidualPlan, ...]
+
+    @property
+    def total_reducers(self) -> int:
+        return sum(r.num_reducers for r in self.residuals)
+
+    @property
+    def predicted_cost(self) -> float:
+        """Total tuples shipped mapper->reducer (integer-share model)."""
+        return sum(r.solution.int_cost for r in self.residuals)
+
+    def describe(self) -> str:
+        lines = [
+            f"SharesSkew plan for {self.query}  (q={self.q:g})",
+            f"  heavy hitters: "
+            + (
+                ", ".join(f"{a}:{v.tolist()}" for a, v in self.hh_values.items())
+                or "none"
+            ),
+        ]
+        lines += ["  " + r.describe() for r in self.residuals]
+        lines.append(
+            f"  total reducers={self.total_reducers} predicted_cost={self.predicted_cost:.0f}"
+        )
+        return "\n".join(lines)
+
+
+def plan_shares_skew(
+    query: JoinQuery,
+    data: Mapping[str, np.ndarray],
+    q: float,
+    hh_threshold: float | None = None,
+    max_hh_per_attr: int = 8,
+    k_max: int = 1 << 22,
+    prune: bool = True,
+) -> SharesSkewPlan:
+    """Stages 1-3 of SharesSkew (§5.2): detect HHs, prune subsumed values,
+    enumerate residual joins, and solve each residual's shares under the
+    per-reducer capacity q."""
+    threshold = float(hh_threshold if hh_threshold is not None else q)
+    candidates = share_attributes(query)  # §4.1: HHs only for non-dominated
+    hh = detect_heavy_hitters(query, data, threshold, candidates, max_hh_per_attr)
+    if prune and hh:
+        hh, _, _ = prune_by_subsumption(query, data, hh, q, k_max)
+
+    residuals: list[ResidualPlan] = []
+    offset = 0
+    for combo in enumerate_combinations(hh):
+        sizes = relevant_sizes(query, data, combo, hh)
+        if any(s == 0 for s in sizes.values()):
+            continue  # empty residual join -> contributes no output
+        pinned = frozenset(combo.pinned)
+        k, sol = solve_k_for_capacity(query, sizes, q, pinned, k_max)
+        rp = ResidualPlan(combo, sizes, k, sol, offset)
+        residuals.append(rp)
+        offset += rp.num_reducers
+    return SharesSkewPlan(query, q, hh, tuple(residuals))
+
+
+def plan_plain_shares(
+    query: JoinQuery,
+    data: Mapping[str, np.ndarray],
+    k: int | None = None,
+    q: float | None = None,
+) -> SharesSkewPlan:
+    """Baseline: the original Shares algorithm — a single residual join, no
+    heavy-hitter handling (skew lands wherever the hash sends it).
+    Give either a fixed reducer budget ``k`` or a capacity ``q``."""
+    sizes = {r.name: int(np.asarray(data[r.name]).shape[0]) for r in query.relations}
+    if (k is None) == (q is None):
+        raise ValueError("pass exactly one of k / q")
+    if k is not None:
+        sol = solve_shares(query, sizes, k)
+        k_budget = int(k)
+        cap = sol.cost / max(1, k)
+    else:
+        k_budget, sol = solve_k_for_capacity(query, sizes, q)
+        cap = float(q)
+    combo = Combination.of({})
+    rp = ResidualPlan(combo, sizes, k_budget, sol, 0)
+    return SharesSkewPlan(query, cap, {}, (rp,))

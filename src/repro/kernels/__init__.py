@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  * ``histogram`` — heavy-hitter detection (one-hot block counting)
+  * ``reducer_join`` / ``flat_join`` — reduce-phase block equi-join
+  * ``flash_attention`` — LM prefill attention (online softmax, GQA)
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU via interpret mode against the pure-jnp oracles in
+``ref.py``.
+"""
+from .ops import flash_attention, flat_join, histogram, reducer_join
+
+__all__ = ["flash_attention", "flat_join", "histogram", "reducer_join"]

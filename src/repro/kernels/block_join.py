@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: reduce-phase block equi-join (count + checksum).
+
+The per-reducer join of the SharesSkew reduce phase (DESIGN.md §2): instead
+of a hash table (random access is hostile to VMEM/VPU), each reducer's R and
+S bins are compared block-against-block — a dense [cap_r, cap_s] equality
+matrix per reducer, reduced to a match count and an orderless weighted
+checksum (sum of w_r * w_s over matches, int32 wraparound = mod 2^32).
+
+Validity convention: weight 0 marks an invalid (padding) slot; valid tuples
+always carry weight >= 1 (see ``repro.mapreduce.hashing.row_weight_*``).
+
+Grid: one step per reducer; key blocks support C key columns (C static).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_join_kernel(rk_ref, rw_ref, sk_ref, sw_ref, cnt_ref, chk_ref):
+    rk = rk_ref[0]  # [cap_r, C]
+    sk = sk_ref[0]  # [cap_s, C]
+    rw = rw_ref[0]  # [cap_r]
+    sw = sw_ref[0]  # [cap_s]
+    eq = jnp.ones((rk.shape[0], sk.shape[0]), dtype=bool)
+    for c in range(rk.shape[1]):
+        eq &= rk[:, c][:, None] == sk[:, c][None, :]
+    eq &= (rw > 0)[:, None] & (sw > 0)[None, :]
+    cnt_ref[0] = eq.astype(jnp.int32).sum()
+    prod = rw[:, None] * sw[None, :]
+    chk_ref[0] = jnp.where(eq, prod, 0).sum()
+
+
+def block_join_pallas(
+    r_keys: jnp.ndarray,  # [K, cap_r, C] int32
+    r_weights: jnp.ndarray,  # [K, cap_r] int32 (0 = invalid slot)
+    s_keys: jnp.ndarray,  # [K, cap_s, C] int32
+    s_weights: jnp.ndarray,  # [K, cap_s] int32
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-reducer match counts [K] and checksums [K] (int32 wraparound)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    k, cap_r, c = r_keys.shape
+    _, cap_s, _ = s_keys.shape
+    grid = (k,)
+    return pl.pallas_call(
+        _block_join_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cap_r, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap_r), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap_s, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap_s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        r_keys.astype(jnp.int32),
+        r_weights.astype(jnp.int32),
+        s_keys.astype(jnp.int32),
+        s_weights.astype(jnp.int32),
+    )
+
+
+def _tiled_join_kernel(rk_ref, rw_ref, sk_ref, sw_ref, cnt_ref, chk_ref):
+    """Large-N variant: 2-D tile grid over one flat (R, S) pair, scalar
+    accumulators revisited every step (for the non-binned paper workloads
+    where one reducer handles millions of tuples)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        chk_ref[...] = jnp.zeros_like(chk_ref)
+
+    rk = rk_ref[...]  # [bn, C]
+    sk = sk_ref[...]  # [bm, C]
+    rw = rw_ref[...]
+    sw = sw_ref[...]
+    eq = jnp.ones((rk.shape[0], sk.shape[0]), dtype=bool)
+    for c in range(rk.shape[1]):
+        eq &= rk[:, c][:, None] == sk[:, c][None, :]
+    eq &= (rw > 0)[:, None] & (sw > 0)[None, :]
+    cnt_ref[...] += eq.astype(jnp.int32).sum()
+    chk_ref[...] += jnp.where(eq, rw[:, None] * sw[None, :], 0).sum()
+
+
+def tiled_join_pallas(
+    r_keys: jnp.ndarray,  # [N, C]
+    r_weights: jnp.ndarray,  # [N]
+    s_keys: jnp.ndarray,  # [M, C]
+    s_weights: jnp.ndarray,  # [M]
+    block_n: int = 512,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single flat join: returns (count, checksum) scalars."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    def _pad(keys, w, b):
+        n = keys.shape[0]
+        pad = (-n) % b
+        if pad:
+            keys = jnp.concatenate(
+                [keys, jnp.zeros((pad, keys.shape[1]), keys.dtype)]
+            )
+            w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+        return keys, w
+
+    block_n = min(block_n, max(int(r_keys.shape[0]), 1))
+    block_m = min(block_m, max(int(s_keys.shape[0]), 1))
+    r_keys, r_weights = _pad(r_keys, r_weights, block_n)
+    s_keys, s_weights = _pad(s_keys, s_weights, block_m)
+    c = r_keys.shape[1]
+    grid = (r_keys.shape[0] // block_n, s_keys.shape[0] // block_m)
+    cnt, chk = pl.pallas_call(
+        _tiled_join_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m, c), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        r_keys.astype(jnp.int32),
+        r_weights.astype(jnp.int32),
+        s_keys.astype(jnp.int32),
+        s_weights.astype(jnp.int32),
+    )
+    return cnt[0], chk[0]

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: FlashAttention forward (causal, GQA) — the LM
+compute hotspot for prefill/scoring.
+
+Online-softmax over KV blocks (Dao et al. '22 adapted to TPU): grid is
+(batch*heads, q_blocks, kv_blocks) with the kv dimension innermost and
+sequential; running max / denominator / accumulator live in VMEM scratch
+across kv steps.  Block sizes default to MXU-aligned 128.  GQA is handled
+in the BlockSpec index maps (query head h reads kv head h // group).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            mask = q_pos >= k_pos
+            s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(j * block_k <= i * block_q + block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, H, Lq, D]
+    k: jnp.ndarray,  # [B, Hkv, Lk, D]
+    v: jnp.ndarray,  # [B, Hkv, Lk, D]
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """FlashAttention forward with grouped KV heads. Returns [B, H, Lq, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    if h % hkv:
+        raise ValueError(f"H={h} not a multiple of Hkv={hkv}")
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    if lq % block_q or lk % block_k:
+        raise ValueError("seq lengths must divide block sizes")
+    qf = q.reshape(b * h, lq, d)
+    kf = k.reshape(b * hkv, lk, d)
+    vf = v.reshape(b * hkv, lk, d)
+    num_k_blocks = lk // block_k
+    grid = (b * h, lq // block_q, num_k_blocks)
+
+    def kv_index(bh, i, j):
+        batch = bh // h
+        head = bh % h
+        return (batch * hkv + head // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            num_k_blocks=num_k_blocks,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, lq, d)

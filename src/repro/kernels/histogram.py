@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: histogram / bincount for heavy-hitter detection.
+
+TPU adaptation (DESIGN.md §2): scatter-add bincount serializes on TPU, so
+we count via a block-wise one-hot comparison
+``(values[:, None] == iota[None, :]).sum(0)`` — a VPU-friendly dense
+reduction whose accumulator lives in VMEM across grid steps.  Negative
+values are ignored (the executor uses -1 as an invalid marker).
+
+Grid: one step per value block; the single output block is revisited every
+step (index_map -> 0) and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _histogram_kernel(vals_ref, out_ref, *, num_bins: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]  # [block]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], num_bins), 1)
+    onehot = (vals[:, None] == bins) & (vals[:, None] >= 0)
+    out_ref[...] += onehot.astype(jnp.int32).sum(axis=0)
+
+
+def histogram_pallas(
+    values: jnp.ndarray,
+    num_bins: int,
+    block: int = 1024,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Count occurrences of each v in [0, num_bins) over int32 ``values``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = values.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        values = jnp.concatenate([values, jnp.full(pad, -1, values.dtype)])
+    grid = (values.shape[0] // block,)
+    return pl.pallas_call(
+        functools.partial(_histogram_kernel, num_bins=num_bins),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((num_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_bins,), jnp.int32),
+        interpret=interpret,
+    )(values.astype(jnp.int32))

@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode on CPU (the kernels target TPU; the CPU
+path executes the same kernel bodies in the Pallas interpreter, which is
+what tests validate against the ``ref.py`` oracles).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .block_join import block_join_pallas, tiled_join_pallas
+from .flash_attention import flash_attention_pallas
+from .histogram import histogram_pallas
+
+
+@partial(jax.jit, static_argnames=("num_bins", "block"))
+def histogram(values: jnp.ndarray, num_bins: int, block: int = 1024) -> jnp.ndarray:
+    """Counts of each value in [0, num_bins); negatives ignored."""
+    return histogram_pallas(values, num_bins, block=block)
+
+
+@jax.jit
+def reducer_join(r_keys, r_weights, s_keys, s_weights):
+    """Per-reducer (count, checksum) for binned 2-way joins [K, cap, C]."""
+    return block_join_pallas(r_keys, r_weights, s_keys, s_weights)
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_m"))
+def flat_join(r_keys, r_weights, s_keys, s_weights, block_n: int = 512, block_m: int = 512):
+    """(count, checksum) for one flat 2-way join [N, C] x [M, C]."""
+    return tiled_join_pallas(
+        r_keys, r_weights, s_keys, s_weights, block_n=block_n, block_m=block_m
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128, block_k: int = 128):
+    """FlashAttention forward, GQA-aware. q [B,H,L,D], k/v [B,Hkv,L,D]."""
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q, block_k=block_k)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def histogram_ref(values: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Counts of v in [0, num_bins); negatives ignored."""
+    v = values.astype(jnp.int32)
+    ok = v >= 0
+    clipped = jnp.clip(v, 0, num_bins - 1)
+    return (
+        jnp.zeros(num_bins, jnp.int32)
+        .at[clipped]
+        .add(ok.astype(jnp.int32))
+    )
+
+
+def block_join_ref(
+    r_keys: jnp.ndarray,  # [K, cap_r, C]
+    r_weights: jnp.ndarray,  # [K, cap_r]
+    s_keys: jnp.ndarray,  # [K, cap_s, C]
+    s_weights: jnp.ndarray,  # [K, cap_s]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    eq = jnp.ones((r_keys.shape[0], r_keys.shape[1], s_keys.shape[1]), bool)
+    for c in range(r_keys.shape[2]):
+        eq &= r_keys[:, :, c][:, :, None] == s_keys[:, :, c][:, None, :]
+    eq &= (r_weights > 0)[:, :, None] & (s_weights > 0)[:, None, :]
+    cnt = eq.astype(jnp.int32).sum(axis=(1, 2))
+    prod = r_weights[:, :, None].astype(jnp.int32) * s_weights[:, None, :].astype(jnp.int32)
+    chk = jnp.where(eq, prod, 0).sum(axis=(1, 2))
+    return cnt, chk
+
+
+def tiled_join_ref(
+    r_keys: jnp.ndarray, r_weights: jnp.ndarray,
+    s_keys: jnp.ndarray, s_weights: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    cnt, chk = block_join_ref(
+        r_keys[None], r_weights[None], s_keys[None], s_weights[None]
+    )
+    return cnt[0], chk[0]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, H, Lq, D]
+    k: jnp.ndarray,  # [B, Hkv, Lk, D]
+    v: jnp.ndarray,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

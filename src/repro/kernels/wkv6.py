@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: RWKV-6 wkv recurrence with VMEM-resident state.
+
+TPU adaptation of the official CUDA wkv6 kernel (which keeps S in
+registers/shared memory and walks time sequentially): the grid is
+(batch*heads, time-chunks) with the chunk dimension sequential; the
+[hd, hd] state lives in a VMEM scratch across chunks, so HBM traffic is
+just the r/k/v/w inputs and y outputs (+ the state once per *sequence*,
+not once per token).  This removes the state round-trip that dominates the
+XLA-scan lowering's memory roofline (EXPERIMENTS.md §Perf, rwkv6 cell).
+
+    y_t = r_t · (S + u ∘ (k_t ⊗ v_t));   S <- diag(w_t) S + k_t ⊗ v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0]  # [hd]
+    s = s_ref[...]  # [hd, hd] f32
+
+    def step(t, s):
+        rt = r_ref[0, t].astype(jnp.float32)  # [hd]
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]  # [hd(i), hd(j)]
+        y = ((s + u[:, None] * kv) * rt[:, None]).sum(axis=0)  # [hd]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return wt[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, s)
+    s_ref[...] = s
+
+
+def wkv6_pallas(
+    r: jnp.ndarray,  # [BH, L, hd]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,  # decay in (0, 1)
+    u: jnp.ndarray,  # [BH, hd] bonus (head-broadcast done by caller)
+    chunk: int = 64,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Returns y [BH, L, hd].  L must divide chunk."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, l, hd = r.shape
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError("L must divide chunk")
+    grid = (bh, l // chunk)
+    blk = pl.BlockSpec((1, chunk, hd), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, pl.BlockSpec((1, hd), lambda i, j: (i, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((bh, l, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential jnp oracle, same layout as wkv6_pallas."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # [BH, hd]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bi,bij->bj", rt, s + u[..., :, None] * kv)
+        return wt[..., :, None] * s + kv, y
+
+    bh, l, hd = r.shape
+    s0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,4 @@
+"""Launch layer: production meshes, sharding rules, dry-run, train driver."""
+from .mesh import data_axes, make_host_mesh, make_production_mesh
+
+__all__ = ["data_axes", "make_host_mesh", "make_production_mesh"]

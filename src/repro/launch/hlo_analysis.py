@@ -1,0 +1,311 @@
+"""Trip-count-aware HLO cost analysis for the roofline (§Roofline).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE regardless of
+trip count — useless for scan-over-layers models.  This module parses the
+compiled SPMD HLO text directly and walks the call graph:
+
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}``
+    (XLA records it for lax.scan) — bodies are multiplied by it;
+  * ``fusion``/``call`` recurse with multiplier 1;
+  * dot FLOPs are exact: 2 * prod(result dims) * prod(contracted lhs dims),
+    with operand shapes resolved through a module-wide symbol table;
+  * elementwise / reduce ops count one FLOP per output (resp. input) item;
+  * HBM-bytes are accumulated at materialization boundaries (fusions, dots,
+    copies, slices, collectives) — fusion *internals* are VMEM-resident and
+    contribute FLOPs only;
+  * collectives record payload bytes and estimated per-device *wire* bytes
+    (ring-algorithm factors with the replica-group size parsed per op).
+
+All numbers are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_COND_BODY = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_COMPACT = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "tanh", "negate", "select", "compare", "and", "or",
+    "xor", "not", "power", "sqrt", "rsqrt", "log", "floor", "ceil", "sign",
+    "cosine", "sine", "clamp", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "atan2", "expm1",
+    "log-plus-one", "round-nearest-afz", "is-finite",
+}
+# Ops that write HBM on TPU.  Standalone convert / broadcast / transpose /
+# iota / pad are layout-level ops the TPU compiler fuses into consumers, so
+# they carry no traffic here (their reads are charged to the consumer).
+_MATERIALIZING = {
+    "fusion", "dot", "copy", "reduce", "dynamic-update-slice", "slice",
+    "concatenate", "gather", "scatter", "reduce-window", "sort",
+    "convolution", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "copy-start", "copy-done",
+    "dynamic-slice",
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ring-algorithm wire-bytes factor given group size n, relative to payload
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),  # payload = scattered result
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_payload: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_wire: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_payload.items():
+            self.coll_payload[k] += v * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.shapes: dict[str, str] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._memo: dict[str, Costs] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: list[str] | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HEADER.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    name = m.group(2)
+                    self.computations[name] = cur = []
+                    if m.group(1):
+                        self.entry = name
+                    # parameters: "pname: shape, ..."
+                    for pm in re.finditer(r"([\w\.\-]+):\s*([\w\[\],\{\}]+)", m.group(3)):
+                        self.shapes[pm.group(1)] = pm.group(2)
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            cur.append(line)
+            im = _INSTR.match(line)
+            if im:
+                self.shapes[im.group(1)] = im.group(2)
+
+    # ------------------------------------------------------------- per-op
+    def _instr_costs(self, line: str, costs: Costs) -> list[tuple[str, float]]:
+        """Accumulate this instruction into ``costs``; return callee list
+        [(computation, multiplier)]."""
+        im = _INSTR.match(line)
+        if not im:
+            return []
+        _, shape_str, op = im.groups()
+        elems, nbytes = _shape_elems_bytes(shape_str)
+
+        callees: list[tuple[str, float]] = []
+        if op == "while":
+            tm = _TRIP.search(line)
+            trip = float(tm.group(1)) if tm else 1.0
+            cb = _COND_BODY.search(line)
+            if cb:
+                callees.append((cb.group(1), trip))
+                callees.append((cb.group(2), trip))
+            return callees
+        if op == "fusion":
+            cm = _CALLS.search(line)
+            if cm:
+                callees.append((cm.group(1), 1.0))
+            costs.bytes += nbytes + self._operand_bytes(line)
+            return callees
+        if op in ("call", "custom-call"):
+            tm = _TO_APPLY.search(line)
+            if tm:
+                callees.append((tm.group(1), 1.0))
+            return callees
+        if op == "conditional":
+            for bm in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)%?([\w\.\-]+)", line):
+                callees.append((bm.group(1), 1.0))
+            return callees
+
+        if op == "dot":
+            dims = _shape_dims(shape_str)
+            out_elems = 1
+            for d in dims:
+                out_elems *= d
+            lhs = _OPERANDS.findall(line[line.index("("):])
+            contract = 1
+            if lhs:
+                lhs_shape = self.shapes.get(lhs[0], "")
+                lhs_dims = _shape_dims(lhs_shape)
+                cm = _LHS_CONTRACT.search(line)
+                if cm and cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            contract *= lhs_dims[ci]
+            costs.flops += 2.0 * out_elems * contract
+            costs.bytes += nbytes + self._operand_bytes(line)
+            return []
+
+        if op == "convolution":
+            # approximation: 2 * out_elems * kernel_elems (kernel = operand 1)
+            ops = _OPERANDS.findall(line[line.index("("):])
+            kernel_elems = 1
+            if len(ops) > 1:
+                ke, _ = _shape_elems_bytes(self.shapes.get(ops[1], ""))
+                kernel_elems = max(ke, 1)
+            costs.flops += 2.0 * elems * kernel_elems
+            costs.bytes += nbytes + self._operand_bytes(line)
+            return []
+
+        if op in _COLLECTIVES:
+            n = self._group_size(line)
+            payload = nbytes
+            costs.coll_payload[op] += payload
+            costs.coll_wire[op] += payload * _WIRE_FACTOR[op](n)
+            costs.coll_count[op] += 1
+            costs.bytes += nbytes + self._operand_bytes(line)
+            return []
+
+        if op in _ELEMENTWISE:
+            costs.flops += elems
+            return []
+        if op in ("reduce", "reduce-window"):
+            in_elems = 0
+            for o in _OPERANDS.findall(line[line.index("("):])[:1]:
+                e, _ = _shape_elems_bytes(self.shapes.get(o, ""))
+                in_elems += e
+            costs.flops += max(in_elems, elems)
+            costs.bytes += nbytes + self._operand_bytes(line)
+            return []
+        if op in ("dynamic-slice", "slice", "gather"):
+            # only the sliced region moves, not the source buffer
+            costs.bytes += 2 * nbytes
+            return []
+        if op == "dynamic-update-slice":
+            # in-place update: traffic = read+write of the update region
+            ops = _OPERANDS.findall(line[line.index("("):].split("), ")[0])
+            upd = self.shapes.get(ops[1], "") if len(ops) > 1 else shape_str
+            _, ub = _shape_elems_bytes(upd)
+            costs.bytes += 2 * ub
+            return []
+        if op == "scatter":
+            costs.bytes += 2 * nbytes
+            return []
+        if op in _MATERIALIZING:
+            costs.bytes += nbytes + self._operand_bytes(line)
+        return []
+
+    def _operand_bytes(self, line: str) -> int:
+        try:
+            args = line[line.index("("):]
+        except ValueError:
+            return 0
+        # cut off attribute section to avoid counting e.g. to_apply refs
+        args = args.split("), ")[0]
+        total = 0
+        for name in _OPERANDS.findall(args):
+            _, b = _shape_elems_bytes(self.shapes.get(name, ""))
+            total += b
+        return total
+
+    def _group_size(self, line: str) -> int:
+        m = _GROUPS_COMPACT.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST.search(line)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    # --------------------------------------------------------- call graph
+    def computation_costs(self, name: str) -> Costs:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Costs()  # cycle guard
+        total = Costs()
+        for line in self.computations.get(name, ()):
+            callees = self._instr_costs(line, total)
+            for callee, mult in callees:
+                total.add(self.computation_costs(callee), mult)
+        self._memo[name] = total
+        return total
+
+    def entry_costs(self) -> Costs:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.computation_costs(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    """Full per-device cost dict for a compiled SPMD module."""
+    mod = HloModule(hlo_text)
+    c = mod.entry_costs()
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.bytes,
+        "collectives": {
+            op: {
+                "count": c.coll_count.get(op, 0.0),
+                "payload_bytes": c.coll_payload.get(op, 0.0),
+                "wire_bytes": c.coll_wire.get(op, 0.0),
+            }
+            for op in _COLLECTIVES
+            if c.coll_count.get(op)
+        },
+        "collective_payload_bytes": sum(c.coll_payload.values()),
+        "collective_wire_bytes": sum(c.coll_wire.values()),
+    }

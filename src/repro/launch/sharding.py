@@ -1,0 +1,176 @@
+"""Sharding rules: params / optimizer state / batches / caches -> PartitionSpec.
+
+Policy (DESIGN.md §5): TP over "model" (attention heads, MLP columns, expert
+dim, vocab), DP over ("pod","data"), ZeRO-1 for optimizer moments (large
+replicated leaves get their biggest divisible dim sharded over "data").
+Rules match on parameter-path suffixes with a size-aware generic fallback,
+so every architecture family (incl. RWKV/Mamba stacks) gets a complete
+spec tree without per-arch boilerplate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# path-suffix -> which logical dim (counted from the END, ignoring the
+# stacked layer dim) to shard over "model"
+_COL = -1  # output/column-parallel (shard last dim)
+_ROW = -2  # input/row-parallel (shard second-to-last dim)
+_SUFFIX_RULES: list[tuple[str, int]] = [
+    ("embed/table", 0),          # vocab-sharded embedding
+    ("lm_head/w", _COL),         # [d, V] -> shard vocab
+    ("attn/wq/..pad", _COL),
+    ("wq", _COL), ("wk", _COL), ("wv", _COL), ("wo", _ROW),
+    ("w_gate", _COL), ("w_up", _COL), ("w_down", _ROW),
+    ("Wr", _COL), ("Wk", _COL), ("Wv", _ROW), ("Wg", _COL), ("Wo", _ROW),
+    ("in_proj", _COL), ("out_proj", _ROW),
+]
+_EXPERT_RULES = ("experts/w_gate", "experts/w_up", "experts/w_down")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# leaves >= this many elements also get FSDP-sharded over "data" (a 104B
+# model sharded only 16-way TP is 26 GB fp32 per device — over HBM; with the
+# extra data-axis dim it is 1.6 GB).  XLA inserts the per-layer all-gathers
+# (FSDP); scan bodies re-gather one layer at a time.
+FSDP_THRESHOLD = 1 << 24
+
+
+def _add_fsdp(dims: list, shape: tuple[int, ...], data_size: int, base: int) -> None:
+    if data_size <= 1 or int(np.prod(shape)) < FSDP_THRESHOLD:
+        return
+    order = sorted(range(base, len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if dims[i] is None and shape[i] % data_size == 0:
+            dims[i] = "data"
+            return
+
+
+def _spec_for(
+    path: str, shape: tuple[int, ...], model_size: int, stacked: bool,
+    data_size: int = 1,
+) -> P:
+    ndim = len(shape)
+    dims: list[Any] = [None] * ndim
+    base = 1 if stacked else 0  # skip the scanned layer axis
+
+    for suffix in _EXPERT_RULES:
+        if path.endswith(suffix):
+            # [L, E, d, f] -> expert parallelism over "model"
+            if shape[base] % model_size == 0:
+                dims[base] = "model"
+                _add_fsdp(dims, shape, data_size, base)
+                return P(*dims)
+
+    for suffix, rule in _SUFFIX_RULES:
+        if path.endswith(suffix):
+            idx = rule if rule < 0 else base + rule
+            if ndim >= (2 if not stacked else 3) or (rule == 0 and ndim >= 2):
+                if shape[idx] % model_size == 0:
+                    dims[idx] = "model"
+                    _add_fsdp(dims, shape, data_size, base)
+                    return P(*dims)
+            break
+
+    # generic fallback: big leaves shard their largest divisible dim
+    if np.prod(shape) >= 1 << 22:
+        order = sorted(range(base, ndim), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % model_size == 0:
+                dims[i] = "model"
+                _add_fsdp(dims, shape, data_size, base)
+                return P(*dims)
+    dims = [None] * ndim
+    _add_fsdp(dims, shape, data_size, base)
+    if all(d is None for d in dims):
+        return P()
+    return P(*dims)
+
+
+def param_specs(params_shape: Any, model_size: int, data_size: int = 1) -> Any:
+    """PartitionSpec pytree for a params (or shape-struct) pytree.
+    ``data_size`` > 1 enables FSDP sharding of large leaves over "data"."""
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        stacked = p.startswith("blocks")
+        return _spec_for(p, tuple(leaf.shape), model_size, stacked, data_size)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def opt_specs(params_spec: Any, params_shape: Any, data_size: int, zero1: bool = True) -> dict:
+    """Optimizer-state specs: moments follow params; ZeRO-1 additionally
+    shards big *replicated* moments over "data"."""
+
+    def mom(spec: P, leaf) -> P:
+        if not zero1:
+            return spec
+        if any(s is not None for s in spec) or np.prod(leaf.shape) < (1 << 20):
+            return spec
+        dims = [None] * len(leaf.shape)
+        for i in sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i]):
+            if leaf.shape[i] % data_size == 0:
+                dims[i] = "data"
+                return P(*dims)
+        return spec
+
+    m = jax.tree.map(mom, params_spec, params_shape)
+    return {"m": m, "v": jax.tree.map(lambda s: s, m), "step": P()}
+
+
+def batch_specs(batch_shape: dict, dp: tuple[str, ...]) -> dict:
+    """Batch dim over the data axes; everything else replicated."""
+    def spec(leaf):
+        dims = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and leaf.shape[0] > 1:
+            dims[0] = dp
+        return P(*dims)
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, dp: tuple[str, ...], model_size: int) -> Any:
+    """Decode caches: batch dim over data axes; within each leaf, shard heads
+    (or head_dim / long sequence) over "model"/"data" where divisible.
+
+    Layouts: KV [L, B, Hkv, S, hd]; rwkv wkv [L, B, H, hd, hd];
+    mamba ssm [L, B, H, p, s]; conv [L, B, K, di]; x_prev [L, B, d]."""
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        dims: list[Any] = [None] * len(shape)
+        if len(shape) >= 2:
+            if shape[1] > 1:
+                dims[1] = dp  # batch
+        if len(shape) == 5:
+            l, b, h, s_or_p, last = shape
+            if h % model_size == 0:
+                dims[2] = "model"
+            elif last % model_size == 0:
+                dims[4] = "model"
+            if b == 1 and len(dp) == 1 and s_or_p % (16) == 0 and s_or_p >= 4096:
+                dims[3] = dp  # long-context: shard the KV sequence over data
+        elif len(shape) == 4:
+            if shape[-1] % model_size == 0:
+                dims[-1] = "model"
+        elif len(shape) == 3:
+            if shape[-1] % model_size == 0:
+                dims[-1] = "model"
+        return P(*dims)
+
+    return jax.tree.map(spec, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,219 @@
+"""End-to-end SharesSkew join execution on JAX (paper §5.2 stage 4 + reduce).
+
+Two paths:
+  * ``run_join`` — single-process: map -> bin-by-reducer -> einsum join,
+    entirely under jit with static shapes (logical reducers tiled on the
+    local device; the paper's Reduce-task-hosting-many-reducers).
+  * ``repro.mapreduce.shuffle.run_distributed`` — shard_map + all_to_all over
+    a device mesh axis (the real shuffle), same reduce phase per device.
+
+Results carry communication and per-reducer-load telemetry so benchmarks can
+reproduce the paper's Figures 1-3 (shuffle cost, load skew).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import ResidualPlan, SharesSkewPlan
+from repro.core.schema import JoinQuery
+
+from .keys import map_phase
+from .local_join import LocalJoinSpec, group_by_reducer, local_join_count_checksum
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinResult:
+    count: int
+    checksum: int
+    comm_tuples: dict[str, int]  # tuples shipped mapper->reducer per relation
+    reducer_loads: np.ndarray  # [K] total arrivals per reducer (all relations)
+    overflow: int  # tuples dropped by capacity (must be 0 for valid runs)
+
+    @property
+    def total_comm(self) -> int:
+        return int(sum(self.comm_tuples.values()))
+
+    @property
+    def max_load(self) -> int:
+        return int(self.reducer_loads.max()) if self.reducer_loads.size else 0
+
+    @property
+    def load_imbalance(self) -> float:
+        """max / mean reducer load — the skew the paper fights."""
+        loads = self.reducer_loads
+        if loads.size == 0 or loads.mean() == 0:
+            return 0.0
+        return float(loads.max() / loads.mean())
+
+
+def _bin_cap(plan: SharesSkewPlan, cap_factor: float) -> int:
+    cap = int(math.ceil(plan.q * cap_factor)) + 8
+    return max(16, cap)
+
+
+def build_pipeline(
+    query: JoinQuery, plan: SharesSkewPlan, cap: int
+):
+    """Build the jitted map+reduce pipeline (static over plan/query/cap)."""
+    spec = LocalJoinSpec.from_query(query)
+    k = plan.total_reducers
+
+    def pipeline(rows_by_rel: dict[str, jnp.ndarray]):
+        bins, valids = {}, {}
+        loads_total = jnp.zeros(k, dtype=jnp.int32)
+        comm = {}
+        overflow = jnp.int32(0)
+        for rel in query.relations:
+            rows = rows_by_rel[rel.name]
+            dest = map_phase(plan, rel, rows)  # [N, W]
+            n, w = dest.shape
+            flat_dest = dest.reshape(-1)
+            flat_rows = jnp.broadcast_to(
+                rows[:, None, :], (n, w, rows.shape[1])
+            ).reshape(-1, rows.shape[1])
+            b, v, loads, ov = group_by_reducer(flat_dest, flat_rows, k, cap)
+            bins[rel.name], valids[rel.name] = b, v
+            loads_total = loads_total + loads
+            comm[rel.name] = jnp.sum(flat_dest >= 0)
+            overflow = overflow + ov
+        count, checksum = local_join_count_checksum(spec, bins, valids)
+        return count, checksum, comm, loads_total, overflow
+
+    return jax.jit(pipeline), spec
+
+
+def run_join(
+    query: JoinQuery,
+    data: dict[str, np.ndarray],
+    plan: SharesSkewPlan,
+    cap_factor: float = 3.0,
+) -> JoinResult:
+    """Execute the plan single-process. ``cap_factor`` scales the per-reducer
+    bin capacity above the expected load q (hash variance headroom)."""
+    if not plan.residuals:  # some relation is empty -> join is empty
+        return JoinResult(
+            count=0,
+            checksum=0,
+            comm_tuples={r.name: 0 for r in query.relations},
+            reducer_loads=np.zeros(0, dtype=np.int32),
+            overflow=0,
+        )
+    cap = _bin_cap(plan, cap_factor)
+    pipe, _ = build_pipeline(query, plan, cap)
+    rows = {
+        name: jnp.asarray(np.asarray(arr), dtype=jnp.int32)
+        for name, arr in data.items()
+    }
+    count, checksum, comm, loads, overflow = pipe(rows)
+    return JoinResult(
+        count=int(count),
+        checksum=int(np.uint32(checksum)),
+        comm_tuples={n: int(c) for n, c in comm.items()},
+        reducer_loads=np.asarray(loads),
+        overflow=int(overflow),
+    )
+
+
+def measure_loads(
+    query: JoinQuery, data: dict[str, np.ndarray], plan: SharesSkewPlan
+) -> JoinResult:
+    """Map phase only: routes every tuple and tallies per-reducer arrivals
+    and shuffle volume WITHOUT executing the reduce-side join.  Used to
+    profile load skew where actually materializing the reducers would be
+    prohibitively large (e.g. plain Shares on heavily skewed data)."""
+    k = plan.total_reducers
+    if k == 0:
+        return JoinResult(0, 0, {r.name: 0 for r in query.relations},
+                          np.zeros(0, np.int32), 0)
+    loads = np.zeros(k, dtype=np.int64)
+    comm = {}
+    for rel in query.relations:
+        rows = jnp.asarray(np.asarray(data[rel.name]), dtype=jnp.int32)
+        dest = np.asarray(map_phase(plan, rel, rows)).reshape(-1)
+        valid = dest >= 0
+        loads += np.bincount(dest[valid], minlength=k)
+        comm[rel.name] = int(valid.sum())
+    return JoinResult(
+        count=-1,  # join not executed
+        checksum=0,
+        comm_tuples=comm,
+        reducer_loads=np.asarray(loads),
+        overflow=0,
+    )
+
+
+def predicted_comm(plan: SharesSkewPlan) -> dict[str, int]:
+    """Exact communication the executor will produce: per relation, the sum
+    over residuals of relevant_size x replication (integer shares)."""
+    out: dict[str, int] = {r.name: 0 for r in plan.query.relations}
+    for res in plan.residuals:
+        for rel in plan.query.relations:
+            repl = 1
+            for a in res.grid_attrs:
+                if a not in rel.attrs:
+                    repl *= res.solution.int_shares[a]
+            out[rel.name] += res.sizes[rel.name] * repl
+    return out
+
+
+def run_join_speculative(
+    query: JoinQuery,
+    data: dict[str, np.ndarray],
+    plan: SharesSkewPlan,
+    cap_factor: float = 3.0,
+    n_shards: int = 4,
+    max_workers: int = 4,
+    speculate_after: float = 3.0,
+) -> JoinResult:
+    """run_join with the reduce phase over-decomposed into reducer shards
+    executed under speculative re-execution (straggler mitigation,
+    DESIGN.md §5).  Each shard re-runs the jitted pipeline restricted to a
+    block of residual joins; results combine associatively (counts and
+    checksums add mod 2^32), so duplicate completions are idempotent."""
+    from .straggler import run_with_speculation
+
+    residuals = plan.residuals
+    if not residuals:
+        return run_join(query, data, plan, cap_factor)
+    n_shards = max(1, min(n_shards, len(residuals)))
+    blocks = np.array_split(np.arange(len(residuals)), n_shards)
+
+    def make_shard(idx_block):
+        # a sub-plan containing only this block's residual joins
+        subs = tuple(residuals[i] for i in idx_block)
+        offset = 0
+        rebased = []
+        for r in subs:
+            rebased.append(
+                ResidualPlan(r.combo, r.sizes, r.k_budget, r.solution, offset)
+            )
+            offset += r.num_reducers
+        sub_plan = SharesSkewPlan(plan.query, plan.q, plan.hh_values, tuple(rebased))
+
+        def shard_fn():
+            return run_join(query, data, sub_plan, cap_factor)
+
+        return shard_fn
+
+    outcomes = run_with_speculation(
+        [make_shard(b) for b in blocks],
+        max_workers=max_workers,
+        speculate_after=speculate_after,
+    )
+    results: list[JoinResult] = [o.result for o in outcomes]
+    return JoinResult(
+        count=sum(r.count for r in results),
+        checksum=int(np.uint32(sum(np.uint32(r.checksum) for r in results))),
+        comm_tuples={
+            rel.name: sum(r.comm_tuples[rel.name] for r in results)
+            for rel in query.relations
+        },
+        reducer_loads=np.concatenate([r.reducer_loads for r in results]),
+        overflow=sum(r.overflow for r in results),
+    )

@@ -1,0 +1,59 @@
+"""Deterministic 32-bit mixing hashes shared by mapper key-gen and oracle.
+
+The Shares algorithm requires one independent hash function per (residual
+join, attribute) pair, identical across relations (§3: "independently
+chosen random hash functions h_i, one for each attribute").  We derive a
+32-bit seed from (residual_index, attribute) and use a murmur3-style
+finalizer — implemented identically in numpy (planning/oracle) and jnp
+(mapper), so host and device agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attr_seed(residual_index: int, attr: str) -> int:
+    return zlib.crc32(f"{residual_index}/{attr}".encode()) & 0xFFFFFFFF
+
+
+def mix32_np(x: np.ndarray, seed: int) -> np.ndarray:
+    x = x.astype(np.uint32) ^ np.uint32(seed)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def mix32_jnp(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bucket_np(x: np.ndarray, seed: int, dim: int) -> np.ndarray:
+    return (mix32_np(x, seed) % np.uint32(dim)).astype(np.int32)
+
+
+def bucket_jnp(x: jnp.ndarray, seed: int, dim: int) -> jnp.ndarray:
+    return (mix32_jnp(x, seed) % jnp.uint32(dim)).astype(jnp.int32)
+
+
+def row_weight_np(rows: np.ndarray, seed: int, mod: int = 251) -> np.ndarray:
+    """Small per-tuple weight for orderless join checksums (host side)."""
+    acc = np.uint32(seed)
+    h = np.full(rows.shape[0], acc, dtype=np.uint32)
+    for j in range(rows.shape[1]):
+        h = mix32_np(rows[:, j].astype(np.uint32) + h, seed + j + 1)
+    return (h % np.uint32(mod)).astype(np.int32) + 1
+
+
+def row_weight_jnp(rows: jnp.ndarray, seed: int, mod: int = 251) -> jnp.ndarray:
+    h = jnp.full(rows.shape[0], jnp.uint32(seed), dtype=jnp.uint32)
+    for j in range(rows.shape[1]):
+        h = mix32_jnp(rows[:, j].astype(jnp.uint32) + h, seed + j + 1)
+    return (h % jnp.uint32(mod)).astype(jnp.int32) + 1

@@ -1,0 +1,146 @@
+"""Map-phase key generation (paper §5.2 Map step + recursive_keys).
+
+The paper builds, per tuple and per compatible residual join, the set of
+reducer keys: hash the attributes the tuple owns (marked ``h``), fix share-1
+attributes (marked ``1``), and *replicate* over the grid dimensions of
+share attributes the tuple lacks (marked ``r`` — the recursive_keys
+enumeration).  Here that enumeration is vectorized: for each
+(relation, residual) pair the replication pattern is static, so key
+generation is a gather-free jnp computation emitting a dense
+``[N, replication]`` block of global reducer ids (−1 where the tuple is not
+relevant to the residual).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import ResidualPlan, SharesSkewPlan
+from repro.core.residual import ORDINARY
+from repro.core.schema import RelationSchema
+
+from .hashing import attr_seed, bucket_jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteSpec:
+    """Static routing recipe for one (relation, residual) pair.
+
+    Global reducer id = offset + sum_i coord_i * stride_i over grid attrs.
+    ``hashed``: (col_in_relation, seed, dim, stride) for attrs the tuple owns.
+    ``replicated``: (dim, stride) for grid attrs the tuple lacks; the tuple is
+    sent to every coordinate — the paper's ``r`` mark.
+    ``pins``: (col, value) equality constraints (this residual's HHs).
+    ``ordinary_excludes``: (col, values[]) — attrs of ordinary type exclude
+    the attribute's HH values.
+    """
+
+    rel_name: str
+    residual_index: int
+    offset: int
+    hashed: tuple[tuple[int, int, int, int], ...]
+    replicated: tuple[tuple[int, int], ...]
+    pins: tuple[tuple[int, int], ...]
+    ordinary_excludes: tuple[tuple[int, tuple[int, ...]], ...]
+
+    @property
+    def replication(self) -> int:
+        return math.prod(d for d, _ in self.replicated) if self.replicated else 1
+
+    # ---- vectorized recursive_keys -----------------------------------------
+    def replica_offsets(self) -> np.ndarray:
+        """Flat id offsets of the replicated coordinates ([replication])."""
+        if not self.replicated:
+            return np.zeros(1, dtype=np.int32)
+        grids = np.meshgrid(
+            *[np.arange(d, dtype=np.int32) for d, _ in self.replicated],
+            indexing="ij",
+        )
+        flat = sum(
+            g.reshape(-1) * np.int32(stride)
+            for g, (_, stride) in zip(grids, self.replicated)
+        )
+        return flat.astype(np.int32)
+
+    def destinations(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """[N, replication] global reducer ids; −1 where not relevant."""
+        n = rows.shape[0]
+        base = jnp.zeros(n, dtype=jnp.int32) + jnp.int32(self.offset)
+        for col, seed, dim, stride in self.hashed:
+            base = base + bucket_jnp(rows[:, col], seed, dim) * jnp.int32(stride)
+        mask = jnp.ones(n, dtype=bool)
+        for col, value in self.pins:
+            mask &= rows[:, col] == value
+        for col, values in self.ordinary_excludes:
+            v = rows[:, col]
+            bad = jnp.zeros(n, dtype=bool)
+            for hv in values:
+                bad |= v == hv
+            mask &= ~bad
+        rep = jnp.asarray(self.replica_offsets())  # [R]
+        dest = base[:, None] + rep[None, :]
+        return jnp.where(mask[:, None], dest, jnp.int32(-1))
+
+
+def build_route_specs(
+    plan: SharesSkewPlan, rel: RelationSchema
+) -> tuple[RouteSpec, ...]:
+    """All routing recipes for one relation across the plan's residuals."""
+    specs = []
+    for ridx, res in enumerate(plan.residuals):
+        specs.append(_route_for(plan, ridx, res, rel))
+    return tuple(specs)
+
+
+def _route_for(
+    plan: SharesSkewPlan, ridx: int, res: ResidualPlan, rel: RelationSchema
+) -> RouteSpec:
+    dims = dict(zip(res.grid_attrs, res.grid_dims))
+    # strides: row-major over grid_attrs order
+    strides: dict[str, int] = {}
+    acc = 1
+    for a in reversed(res.grid_attrs):
+        strides[a] = acc
+        acc *= dims[a]
+    hashed = []
+    replicated = []
+    for a in res.grid_attrs:
+        if a in rel.attrs:
+            hashed.append((rel.index_of(a), attr_seed(ridx, a), dims[a], strides[a]))
+        else:
+            replicated.append((dims[a], strides[a]))
+    pins = []
+    excludes = []
+    combo = res.combo.as_dict()
+    for a, v in combo.items():
+        if a not in rel.attrs:
+            continue
+        col = rel.index_of(a)
+        if v is ORDINARY:
+            hh = plan.hh_values.get(a)
+            if hh is not None and len(hh):
+                excludes.append((col, tuple(int(x) for x in np.asarray(hh))))
+        else:
+            pins.append((col, int(v)))
+    return RouteSpec(
+        rel_name=rel.name,
+        residual_index=ridx,
+        offset=res.reducer_offset,
+        hashed=tuple(hashed),
+        replicated=tuple(replicated),
+        pins=tuple(pins),
+        ordinary_excludes=tuple(excludes),
+    )
+
+
+def map_phase(
+    plan: SharesSkewPlan, rel: RelationSchema, rows: jnp.ndarray
+) -> jnp.ndarray:
+    """Full map step for one relation: concat of per-residual destination
+    blocks -> [N, total_width] global reducer ids (−1 = not emitted)."""
+    specs = build_route_specs(plan, rel)
+    blocks = [s.destinations(rows) for s in specs]
+    return jnp.concatenate(blocks, axis=1)

@@ -1,0 +1,81 @@
+"""Straggler mitigation: speculative re-execution of slow reduce shards.
+
+MapReduce-native fault handling (DESIGN.md §5): the reduce phase is split
+into independent shards (blocks of reducers).  A shard that runs slower
+than ``speculate_after`` x the median completed-shard time gets a backup
+execution; the first result wins.  Because shards are deterministic pure
+functions, duplicate completion is harmless (results are idempotent).
+
+On a real pod the backup lands on a different host; here workers are
+threads, which is the same control plane with a process-local executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Callable, Sequence
+
+
+@dataclasses.dataclass
+class ShardOutcome:
+    shard_id: int
+    result: object
+    attempts: int
+    speculated: bool
+    elapsed_s: float
+
+
+def run_with_speculation(
+    shard_fns: Sequence[Callable[[], object]],
+    max_workers: int = 4,
+    speculate_after: float = 3.0,
+    poll_interval_s: float = 0.01,
+    min_completed_before_speculation: int = 2,
+) -> list[ShardOutcome]:
+    """Run every shard; re-issue stragglers; return per-shard outcomes."""
+    outcomes: dict[int, ShardOutcome] = {}
+    lock = threading.Lock()
+
+    with ThreadPoolExecutor(max_workers=max_workers) as pool:
+        start = {i: time.monotonic() for i in range(len(shard_fns))}
+        attempts: dict[int, int] = {i: 1 for i in range(len(shard_fns))}
+        speculated: set[int] = set()
+        futures: dict[Future, int] = {
+            pool.submit(fn): i for i, fn in enumerate(shard_fns)
+        }
+        durations: list[float] = []
+
+        while futures:
+            done, _ = wait(list(futures), timeout=poll_interval_s, return_when=FIRST_COMPLETED)
+            now = time.monotonic()
+            for f in done:
+                i = futures.pop(f)
+                if i in outcomes:
+                    continue  # backup finished after primary; ignore
+                elapsed = now - start[i]
+                with lock:
+                    outcomes[i] = ShardOutcome(
+                        shard_id=i,
+                        result=f.result(),
+                        attempts=attempts[i],
+                        speculated=i in speculated,
+                        elapsed_s=elapsed,
+                    )
+                    durations.append(elapsed)
+            # speculation: compare running shards against median finished time
+            if len(durations) >= min_completed_before_speculation:
+                med = sorted(durations)[len(durations) // 2]
+                for f, i in list(futures.items()):
+                    if i in outcomes or i in speculated:
+                        continue
+                    if now - start[i] > speculate_after * max(med, 1e-4):
+                        speculated.add(i)
+                        attempts[i] += 1
+                        futures[pool.submit(shard_fns[i])] = i
+            # drop futures whose shard already completed via another attempt
+            for f, i in list(futures.items()):
+                if i in outcomes and f.done():
+                    futures.pop(f)
+    return [outcomes[i] for i in sorted(outcomes)]

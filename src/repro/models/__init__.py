@@ -1,0 +1,4 @@
+"""Model zoo: dense / MoE / RWKV6 / Mamba2-hybrid / encoder / VLM backbones."""
+from .zoo import ModelApi, build_model, make_batch
+
+__all__ = ["ModelApi", "build_model", "make_batch"]

@@ -1,0 +1,450 @@
+"""Shared model layers: norms, attention (GQA / sliding-window), MLPs, rotary.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays; ``init_*``
+functions build them, ``apply``-style functions consume them.  Compute dtype
+is the caller's choice (params are cast on entry); accumulation-sensitive
+ops (norms, softmax, losses) run in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+# When seq-len exceeds this, attention switches to the chunked (flash-style,
+# scan-over-query-blocks) path so [L, L] score matrices never materialize.
+# Env-overridable: perf iterations sweep these (EXPERIMENTS.md §Perf).
+ATTN_CHUNK_THRESHOLD = int(os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD", "2048"))
+ATTN_CHUNK = int(os.environ.get("REPRO_ATTN_CHUNK", "1024"))
+
+# ------------------------------------------------------------------ sharding
+# Activation-sharding constraint hook (sequence parallelism): the launcher
+# sets a spec like P(("pod","data"), "model", None); models call
+# ``constrain_activations`` on the residual stream at layer boundaries.
+_ACT_SPEC: tuple | None = None  # (PartitionSpec, axis_sizes dict)
+
+
+def set_activation_sharding(spec, axis_sizes: dict | None = None) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = None if spec is None else (spec, dict(axis_sizes or {}))
+
+
+def _apply_spec(x: jnp.ndarray, spec, sizes: dict) -> jnp.ndarray:
+    dims = []
+    for d, s in zip(x.shape, spec):
+        if s is None:
+            dims.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        dims.append(s if d % max(total, 1) == 0 else None)
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+def constrain_activations(x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the configured [B, S, d] activation sharding if dims divide."""
+    if _ACT_SPEC is None or x.ndim != 3:
+        return x
+    spec, sizes = _ACT_SPEC
+    return _apply_spec(x, spec, sizes)
+
+
+def constrain_moe_dispatch(x: jnp.ndarray) -> jnp.ndarray:
+    """[g, slots, cap, d/f] MoE dispatch tensors: g over the data axes,
+    slots over "model" — forces the 2-D (DP x EP) sharding of the expert
+    einsum (XLA's propagation alone all-gathers the group dim)."""
+    if _ACT_SPEC is None or x.ndim != 4:
+        return x
+    (spec, sizes) = _ACT_SPEC
+    dp = spec[0]
+    return _apply_spec(x, (dp, "model", None, None), sizes)
+
+
+# --------------------------------------------------------------------- utils
+def _dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def linear(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": _dense_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(params: Params | None, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if params is not None and "scale" in params:
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(params: Params | None, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm; with params=None it is OLMo's non-parametric LN."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if params is not None:
+        if "scale" in params:
+            y = y * params["scale"].astype(jnp.float32)
+        if "bias" in params:
+            y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int) -> Params | None:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layer":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparametric":  # OLMo
+        return None
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params: Params | None, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "rms":
+        return rms_norm(params, x)
+    return layer_norm(params, x)
+
+
+# -------------------------------------------------------------------- rotary
+def rotary_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., L, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, L, D]; cos/sin: [L, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos.astype(x.dtype)
+    s = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 1e4
+    causal: bool = True
+    window: int | None = None  # sliding-window size (None = full)
+    qk_norm: bool = False
+    bias: bool = False
+    logit_softcap: float | None = None
+
+
+def init_attention(key, cfg: AttnConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": _dense_init(k1, (d, cfg.n_heads * hd)),
+        "wk": _dense_init(k2, (d, cfg.n_kv * hd)),
+        "wv": _dense_init(k3, (d, cfg.n_kv * hd)),
+        "wo": _dense_init(k4, (cfg.n_heads * hd, d)),
+    }
+    if cfg.bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+    return p
+
+
+def _qkv(params: Params, cfg: AttnConfig, x: jnp.ndarray):
+    b, l, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, l, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, l, cfg.n_kv, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, l, cfg.n_kv, hd)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(cfg.n_heads, hd)
+        k = k + params["bk"].astype(x.dtype).reshape(cfg.n_kv, hd)
+        v = v + params["bv"].astype(x.dtype).reshape(cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    return (
+        q.transpose(0, 2, 1, 3),  # [B, H, L, D]
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+    )
+
+
+def _sdpa(
+    q: jnp.ndarray,  # [B, H, Lq, D]
+    k: jnp.ndarray,  # [B, Hkv, Lk, D]
+    v: jnp.ndarray,
+    causal: bool,
+    window: int | None,
+    q_offset: int | jnp.ndarray = 0,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    b, h, lq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, lq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    lk = k.shape[2]
+    q_pos = jnp.arange(lq) + q_offset  # absolute positions of queries
+    k_pos = jnp.arange(lk)
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, lq, d).astype(q.dtype)
+
+
+def _sdpa_chunked(
+    q: jnp.ndarray,  # [B, H, L, D]
+    k: jnp.ndarray,  # [B, Hkv, L, D]
+    v: jnp.ndarray,
+    causal: bool,
+    eff_window: jnp.ndarray | None,  # traced key-range bound or None
+    chunk: int,
+    softcap: float | None,
+) -> jnp.ndarray:
+    """Scan over query blocks (flash-style): peak score memory is
+    [B, H, chunk, L] instead of [B, H, L, L].  Each chunk body is
+    checkpointed so the backward pass re-materializes scores per chunk."""
+    b, h, l, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    n = l // chunk
+    qg = q.reshape(b, hkv, group, n, chunk, d)
+    qg = jnp.moveaxis(qg, 3, 0)  # [n, B, hkv, g, chunk, D]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    k_pos = jnp.arange(l)
+    scale = 1.0 / math.sqrt(d)
+
+    @jax.checkpoint
+    def body(_, xs):
+        qc, i = xs  # [B, hkv, g, chunk, D], []
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(jnp.float32), kf) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = i * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, l), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if eff_window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < eff_window
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        return None, o.astype(q.dtype)
+
+    _, out = jax.lax.scan(body, None, (qg, jnp.arange(n)))
+    out = jnp.moveaxis(out, 0, 3)  # [B, hkv, g, n, chunk, D]
+    return out.reshape(b, h, l, d)
+
+
+def attention(
+    params: Params,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # [B, L, d_model]
+    is_global: bool | jnp.ndarray = True,
+) -> jnp.ndarray:
+    """Full attention; ``is_global=False`` applies cfg.window (Gemma-style
+    local layers).  ``is_global`` may be a traced bool so scanned layer
+    stacks can alternate local/global without branching.  Long sequences
+    take the chunked path (no [L, L] materialization)."""
+    b, l, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    cos, sin = rotary_angles(jnp.arange(l), cfg.head_dim, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+
+    eff_window = None
+    if cfg.window is not None:
+        eff_window = jnp.where(is_global, jnp.int32(l), jnp.int32(cfg.window))
+
+    # opt-in Pallas flash-attention path (TPU target; interpret mode on CPU).
+    # Full-window causal/bidir only — local layers keep the masked jnp path.
+    if (
+        os.environ.get("REPRO_USE_FLASH") == "1"
+        and cfg.window is None
+        and cfg.logit_softcap is None
+        and l % 128 == 0
+    ):
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        out = flash_attention_pallas(q, k, v, causal=cfg.causal)
+    elif l > ATTN_CHUNK_THRESHOLD and l % ATTN_CHUNK == 0:
+        out = _sdpa_chunked(
+            q, k, v, cfg.causal, eff_window, ATTN_CHUNK, cfg.logit_softcap
+        )
+    elif eff_window is None:
+        out = _sdpa(q, k, v, cfg.causal, None, softcap=cfg.logit_softcap)
+    else:
+        hkv, group = cfg.n_kv, cfg.n_heads // cfg.n_kv
+        qg = q.reshape(b, hkv, group, l, cfg.head_dim)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+        ) / math.sqrt(cfg.head_dim)
+        if cfg.logit_softcap:
+            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+        q_pos = jnp.arange(l)
+        k_pos = jnp.arange(l)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        mask &= (q_pos[:, None] - k_pos[None, :]) < eff_window
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+        out = out.reshape(b, hkv * group, l, cfg.head_dim).astype(x.dtype)
+    y = out.transpose(0, 2, 1, 3).reshape(b, l, cfg.n_heads * cfg.head_dim)
+    return y @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(
+    params: Params,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # [B, 1, d_model] — one new token
+    k_cache: jnp.ndarray,  # [B, Hkv, S, D]
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # [] current position (number of tokens already cached)
+    is_global: bool | jnp.ndarray = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step against a KV cache. Returns (y, k_cache, v_cache).
+    ``is_global`` lifts the sliding window for Gemma-style global layers."""
+    b = x.shape[0]
+    q, k, v = _qkv(params, cfg, x)  # q [B,H,1,D], k/v [B,Hkv,1,D]
+    cos, sin = rotary_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=2)
+    s_max = k_cache.shape[2]
+    hkv, group = cfg.n_kv, cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, hkv, group, 1, cfg.head_dim)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) / math.sqrt(cfg.head_dim)
+    if cfg.logit_softcap:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    k_pos = jnp.arange(s_max)
+    valid = k_pos[None, :] <= pos
+    if cfg.window is not None:
+        in_window = (pos - k_pos[None, :]) < cfg.window
+        valid &= in_window | jnp.asarray(is_global)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
+    out = out.reshape(b, cfg.n_heads, 1, cfg.head_dim).astype(x.dtype)
+    y = out.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return y @ params["wo"].astype(x.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------- MLPs
+def init_mlp(key, d: int, f: int, gated: bool = True, bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d, f)), "w_down": _dense_init(ks[1], (f, d))}
+    if gated:
+        p["w_gate"] = _dense_init(ks[2], (d, f))
+    if bias:
+        p["b_up"] = jnp.zeros((f,), jnp.float32)
+        p["b_down"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def mlp(params: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+         "gelu_tanh": lambda u: jax.nn.gelu(u, approximate=True)}[act]
+    up = x @ params["w_up"].astype(x.dtype)
+    if "b_up" in params:
+        up = up + params["b_up"].astype(x.dtype)
+    if "w_gate" in params:
+        h = a(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        h = a(up)
+    y = h @ params["w_down"].astype(x.dtype)
+    if "b_down" in params:
+        y = y + params["b_down"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params: Params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def chunked_cross_entropy(
+    x: jnp.ndarray,  # [B, L, d] final hidden states
+    emb_table: jnp.ndarray,  # [V, d] (tied) or lm_head [d, V] passed transposed
+    labels: jnp.ndarray,  # [B, L]
+    chunk: int = 512,
+    logit_softcap: float | None = None,
+) -> jnp.ndarray:
+    """Cross-entropy without materializing [B, L, V] logits: scan over
+    sequence chunks, rematerializing logits in the backward pass."""
+    b, l, d = x.shape
+    v = emb_table.shape[0]
+    chunk = min(chunk, l)
+    n_chunks = math.ceil(l / chunk)
+    pad = n_chunks * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xs = x.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xy):
+        xc, yc = xy  # [B, chunk, d], [B, chunk]
+        logits = (xc @ emb_table.T.astype(xc.dtype)).astype(jnp.float32)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(yc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = yc >= 0
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(chunk_loss, (0.0, 0), (xs, ys))
+    return total / jnp.maximum(count, 1)

@@ -1,0 +1,292 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid (zamba2-2.7b).
+
+Mamba2 recurrence per head (state dim s, head dim p):
+    S_t = exp(dt_t * A_h) * S_{t-1} + (dt_t * x_t) ⊗ B_t
+    y_t = S_t @ C_t + D_h * x_t
+with scalar A per head, shared B/C across heads (ngroups=1), a short causal
+depthwise conv on the SSM input, and gated-RMSNorm output (arXiv:2405.21060).
+
+Zamba2 (arXiv:2411.15242): a stack of Mamba2 blocks with one *shared*
+transformer block (attention + MLP, same parameters each time) applied every
+``hybrid_period`` layers.  (The paper adds per-invocation LoRA deltas on the
+shared block; omitted — noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import (
+    _dense_init,
+    apply_norm,
+    attention,
+    attention_decode,
+    chunked_cross_entropy,
+    embed,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    mlp,
+    rms_norm,
+)
+from .transformer import attn_config, logits_table
+
+_CONV_K = 4
+
+
+def init_mamba_block(key, cfg: ArchConfig) -> dict:
+    d, di, st, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": init_norm(cfg.norm, d),
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * st + h)),
+        "conv_w": _dense_init(ks[1], (_CONV_K, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -1.0, jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, d)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state=None):
+    """Depthwise causal conv over time. x [B, L, di]; w [K, di].
+    ``state`` carries the last K-1 inputs for decode. Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    ) + b.astype(x.dtype)
+    return y, xx[:, -(k - 1) :, :]
+
+
+_SSD_UNROLL = int(os.environ.get("REPRO_SSD_UNROLL", "8"))
+
+
+def _ssd_scan(xh, dt, decay, B, C, s0, chunk: int, unroll: int | None = None):
+    """xh [B,L,H,p]; dt/decay [B,L,H]; B/C [B,L,s]; s0 [B,H,p,s] f32.
+
+    ``unroll`` tokens per scan step keep the [B,H,p,s] state on-chip across
+    a token block (§Perf: cuts the state's HBM round-trips by the block
+    size — the dominant memory-roofline term of the naive scan)."""
+    b, l, h, p = xh.shape
+    s_dim = B.shape[-1]
+    chunk = min(chunk, l)
+    unroll = _SSD_UNROLL if unroll is None else unroll
+    unroll = max(1, min(unroll, chunk))
+    if chunk % unroll:
+        unroll = 1
+    n_chunks = math.ceil(l / chunk)
+    pad = n_chunks * chunk - l
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    def tc(a, trail):  # [B, L, ...] -> [n, chunk/u, u, B, ...]
+        x = a.reshape((b, n_chunks, chunk // unroll, unroll) + trail)
+        return jnp.moveaxis(x, 0, 3)
+
+    xc = tc(xh, (h, p))
+    dc = tc(dt, (h,))
+    gc = tc(decay, (h,))
+    bc = tc(B, (s_dim,))
+    cc = tc(C, (s_dim,))
+
+    @jax.checkpoint
+    def outer(s, xs):
+        xck, dck, gck, bck, cck = xs
+
+        def inner(s, step):
+            xt, dtt, gt, bt, ct = step  # [u,B,H,p] [u,B,H] [u,B,H] [u,B,s] [u,B,s]
+            ys = []
+            for t in range(unroll):
+                dx = (dtt[t][..., None] * xt[t]).astype(jnp.float32)
+                s = gt[t][..., None, None].astype(jnp.float32) * s + dx[
+                    ..., None
+                ] * bt[t][:, None, None, :].astype(jnp.float32)
+                ys.append(jnp.einsum("bhps,bs->bhp", s, ct[t].astype(jnp.float32)))
+            return s, jnp.stack(ys)
+
+        return jax.lax.scan(inner, s, (xck, dck, gck, bck, cck))
+
+    s, ys = jax.lax.scan(outer, s0, (xc, dc, gc, bc, cc))
+    ys = ys.reshape(n_chunks * chunk, b, h, p).transpose(1, 0, 2, 3)
+    return ys[:, :l], s
+
+
+def mamba_mix(p: dict, x: jnp.ndarray, cfg: ArchConfig, ssm_state=None, conv_state=None, chunk: int = 64):
+    b, l, d = x.shape
+    di, st, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // h
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xin, bmat, cmat, dtr = jnp.split(proj, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1)
+    xin, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # [B,L,H]
+    decay = jnp.exp(dt * -jnp.exp(p["A_log"]))
+    xh = xin.reshape(b, l, h, hd)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, h, hd, st), jnp.float32)
+    y, s = _ssd_scan(
+        xh.astype(jnp.float32), dt, decay,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), ssm_state, chunk,
+    )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rms_norm(None, y * jax.nn.silu(z)) * p["norm_scale"].astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype), s, conv_state
+
+
+def init_shared_block(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(k1, attn_config(cfg)),
+        "ln2": init_norm(cfg.norm, cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    blocks = [init_mamba_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    params = {
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.hybrid_period:
+        params["shared_attn"] = init_shared_block(keys[-2], cfg)
+    if not cfg.tie_embeddings:
+        from .layers import init_linear
+
+        params["lm_head"] = init_linear(keys[-3], cfg.d_model, cfg.vocab)
+    return params
+
+
+def _groups(cfg: ArchConfig) -> tuple[int, int]:
+    period = cfg.hybrid_period or cfg.n_layers
+    assert cfg.n_layers % period == 0, "n_layers must divide hybrid_period"
+    return cfg.n_layers // period, period
+
+
+def _shared_apply(cfg, shared, x):
+    h = apply_norm(cfg.norm, shared["ln1"], x)
+    x = x + attention(shared["attn"], attn_config(cfg), h)
+    h = apply_norm(cfg.norm, shared["ln2"], x)
+    return x + mlp(shared["mlp"], h, cfg.act)
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    prefix_embeds=None,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    chunk: int = 64,
+) -> jnp.ndarray:
+    x = embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    n_groups, period = _groups(cfg)
+    stacked = params["blocks"]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]), stacked
+    )
+
+    from .layers import constrain_activations
+
+    def mamba_body(blk, x):
+        x = constrain_activations(x)
+        h = apply_norm(cfg.norm, blk["ln"], x)
+        y, _, _ = mamba_mix(blk, h, cfg, chunk=chunk)
+        return x + y
+
+    body = jax.checkpoint(mamba_body) if remat else mamba_body
+
+    for g in range(n_groups):
+        grp = jax.tree.map(lambda a: a[g], grouped)
+
+        def step(x, blk):
+            return body(blk, x), None
+
+        x, _ = jax.lax.scan(step, x, grp)
+        if cfg.hybrid_period:
+            shared_body = (
+                jax.checkpoint(partial(_shared_apply, cfg)) if remat else partial(_shared_apply, cfg)
+            )
+            x = shared_body(params["shared_attn"], x)
+    return apply_norm(cfg.norm, params["final_norm"], x)
+
+
+def loss_fn(cfg, params, batch, dtype=jnp.bfloat16, remat=True, loss_chunk=512):
+    tokens = batch["tokens"]
+    h = forward_hidden(cfg, params, tokens, dtype=dtype, remat=remat)
+    return chunked_cross_entropy(
+        h[:, :-1, :], logits_table(cfg, params), tokens[:, 1:], chunk=loss_chunk
+    )
+
+
+# ------------------------------------------------------------------ serving
+def init_state(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    l, b = cfg.n_layers, batch
+    h, hd, st, di = cfg.ssm_heads, cfg.d_inner // cfg.ssm_heads, cfg.ssm_state, cfg.d_inner
+    n_groups, _ = _groups(cfg)
+    state = {
+        "ssm": jnp.zeros((l, b, h, hd, st), jnp.float32),
+        "conv": jnp.zeros((l, b, _CONV_K - 1, di), dtype),
+    }
+    if cfg.hybrid_period:
+        state["k"] = jnp.zeros((n_groups, b, cfg.n_kv, max_seq, cfg.hd), dtype)
+        state["v"] = jnp.zeros((n_groups, b, cfg.n_kv, max_seq, cfg.hd), dtype)
+    return state
+
+
+def decode_step(cfg, params, state, tokens, pos, dtype=jnp.bfloat16):
+    x = embed(params["embed"], tokens, dtype)
+    n_groups, period = _groups(cfg)
+    ssm_new, conv_new, k_new, v_new = [], [], [], []
+    acfg = attn_config(cfg)
+    for g in range(n_groups):
+        for i in range(period):
+            li = g * period + i
+            blk = jax.tree.map(lambda a: a[li], params["blocks"])
+            h = apply_norm(cfg.norm, blk["ln"], x)
+            y, s, cs = mamba_mix(
+                blk, h, cfg, ssm_state=state["ssm"][li], conv_state=state["conv"][li], chunk=1
+            )
+            x = x + y
+            ssm_new.append(s)
+            conv_new.append(cs)
+        if cfg.hybrid_period:
+            shared = params["shared_attn"]
+            h = apply_norm(cfg.norm, shared["ln1"], x)
+            y, kc, vc = attention_decode(
+                shared["attn"], acfg, h, state["k"][g], state["v"][g], pos
+            )
+            x = x + y
+            h = apply_norm(cfg.norm, shared["ln2"], x)
+            x = x + mlp(shared["mlp"], h, cfg.act)
+            k_new.append(kc)
+            v_new.append(vc)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1, :] @ logits_table(cfg, params).T.astype(x.dtype)).astype(jnp.float32)
+    new_state = {"ssm": jnp.stack(ssm_new), "conv": jnp.stack(conv_new)}
+    if cfg.hybrid_period:
+        new_state["k"] = jnp.stack(k_new)
+        new_state["v"] = jnp.stack(v_new)
+    return logits, new_state

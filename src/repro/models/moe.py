@@ -1,0 +1,367 @@
+"""Mixture-of-Experts transformer with SharesSkew expert dispatch.
+
+The paper's technique transferred (DESIGN.md §2): token->expert routing is a
+skewed 2-way join ``Tokens(t, e) ⋈ Experts(e, W_e)``.  Hot experts are the
+heavy hitters; the Shares rectangle of Example 2 becomes a *replica grid*:
+tokens headed to a hot expert are hash-partitioned across that expert's
+replicas (the x dimension; the y dimension — splitting the expert weights —
+is realized by the mesh's tensor-parallel sharding of expert matrices).
+
+Dispatch is sort-based and static-shaped: slot count S = E + extra_slots and
+per-slot capacity C are compile-time constants; *which* expert each extra
+slot serves is a runtime value recomputed from the batch's expert histogram
+(`plan_replica_slots`), so hot-expert relief needs no recompilation.  The
+binning primitive is the same ``group_by_reducer`` that shuffles join
+tuples — the MoE dispatch IS the join engine's shuffle.
+
+The naive baseline (capacity-factor top-k with drops) is this same code with
+``extra_slots=0``.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.mapreduce.hashing import mix32_jnp
+from repro.mapreduce.local_join import group_by_reducer
+
+from .layers import (
+    apply_norm,
+    attention,
+    attention_decode,
+    chunked_cross_entropy,
+    embed,
+    init_attention,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    init_norm,
+    mlp,
+    _dense_init,
+)
+from .transformer import attn_config, logits_table, _layer_flags
+
+
+# ----------------------------------------------------------------- init
+def init_moe_block(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, d, fe = cfg.n_experts, cfg.d_model, cfg.d_expert
+    blk = {
+        "ln1": init_norm(cfg.norm, d),
+        "attn": init_attention(k1, attn_config(cfg)),
+        "ln2": init_norm(cfg.norm, d),
+        "router": _dense_init(k2, (d, e)),
+        "experts": {
+            "w_gate": _dense_init(k3, (e, d, fe)),
+            "w_up": _dense_init(k4, (e, d, fe)),
+            "w_down": _dense_init(k5, (e, fe, d), scale=1.0 / math.sqrt(fe)),
+        },
+    }
+    if cfg.n_shared:
+        k6, k7 = jax.random.split(k1)
+        blk["shared"] = init_mlp(k6, d, cfg.d_ff, gated=True)
+        blk["shared_gate"] = _dense_init(k7, (d, 1))
+    return blk
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [init_moe_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model),
+        "blocks": stacked,
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.vocab)
+    return params
+
+
+# ------------------------------------------------- SharesSkew replica plan
+def plan_replica_slots(
+    counts: jnp.ndarray,  # [E] tokens routed to each expert this batch
+    capacity: int,
+    n_experts: int,
+    extra_slots: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Allocate ``extra_slots`` replica slots to overloaded experts.
+
+    Returns (slot_expert [E+extra], replica_count [E], extra_base [E]).
+    need_e = ceil(count_e / C) - 1 replicas beyond the primary; grants go to
+    the neediest experts first (the heavy hitters), truncated to the budget —
+    the reducer-allocation rule of paper §4.2 with q = capacity.
+    """
+    e = n_experts
+    need = jnp.maximum((counts + capacity - 1) // capacity - 1, 0)
+    order = jnp.argsort(-need)
+    sorted_need = need[order]
+    cum = jnp.cumsum(sorted_need)
+    grant_sorted = jnp.clip(sorted_need - jnp.maximum(cum - extra_slots, 0), 0)
+    grant = jnp.zeros(e, jnp.int32).at[order].set(grant_sorted.astype(jnp.int32))
+    replica_count = 1 + grant
+    extra_base = e + jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(grant)[:-1].astype(jnp.int32)]
+    )
+    slot_expert = jnp.concatenate(
+        [
+            jnp.arange(e, dtype=jnp.int32),
+            jnp.repeat(
+                jnp.arange(e, dtype=jnp.int32), grant, total_repeat_length=extra_slots
+            ),
+        ]
+    )
+    return slot_expert, replica_count, extra_base
+
+
+# ------------------------------------------------------------- moe ffn
+def moe_ffn(
+    blk: dict,
+    x: jnp.ndarray,  # [B, L, d]
+    cfg: ArchConfig,
+    capacity_factor: float = 1.25,
+    extra_slots: int = 0,
+    expert_pad: int = 0,
+    return_stats: bool = False,
+):
+    """Group-local dispatch: one dispatch group per sequence, so the
+    sort/bin/gather stays local to the data shard (a global argsort would
+    force XLA to replicate it).  The [G, S, cap, d] dispatch buffer is the
+    MoE all-to-all: G is batch-sharded, S is expert-sharded.  This mirrors
+    how the join engine shards its shuffle (mapper-local binning, one
+    exchange)."""
+    b, l, d = x.shape
+    g, tg = b, l  # dispatch groups = sequences
+    e, k = cfg.n_experts, cfg.top_k
+    s = e + extra_slots
+    cap = max(8, int(math.ceil(tg * k * capacity_factor / s)))
+
+    logits = (x @ blk["router"].astype(x.dtype)).astype(jnp.float32)  # [g,tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # [g, tg, k]
+    topw = topw / topw.sum(-1, keepdims=True)
+
+    flat_e = topi.reshape(g, tg * k).astype(jnp.int32)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k)
+    )
+    flat_c = jnp.broadcast_to(
+        jnp.arange(tg * k, dtype=jnp.int32)[None], (g, tg * k)
+    )
+
+    # pad the expert dim so it tiles the "model" axis evenly (e.g. qwen2's
+    # 60 experts -> 64): unpadded counts force XLA to all-gather the whole
+    # dispatch tensor around every slot-dim reshard (EXPERIMENTS.md §Perf)
+    e_pad = max(e, expert_pad, int(os.environ.get("REPRO_EXPERT_PAD", "0")))
+
+    if extra_slots > 0:
+        # global expert histogram (tiny [E] reduction across shards)
+        counts = jnp.zeros(e, jnp.int32).at[topi.reshape(-1)].add(1)
+        slot_expert, replica_count, extra_base = plan_replica_slots(
+            counts, cap * g, e, extra_slots
+        )
+        # SharesSkew map step: hash-partition tokens across replicas.
+        # extra_base indexes extra slots from E; rebase to 0 for the
+        # separate extra binning below.
+        gid = jnp.arange(g, dtype=jnp.int32)[:, None] * (tg * k) + flat_c
+        r = (
+            mix32_jnp(gid, 0xD15C)
+            % replica_count[flat_e].astype(jnp.uint32)
+        ).astype(jnp.int32)
+        dest_p = jnp.where(r == 0, flat_e, jnp.int32(-1))
+        dest_x = jnp.where(r > 0, extra_base[flat_e] - e + r - 1, jnp.int32(-1))
+        slot_expert_x = slot_expert[e:]
+    else:
+        dest_p = flat_e
+        dest_x = None
+
+    rows = jnp.stack([flat_t, flat_c], axis=-1)  # [g, tg*k, 2]
+    w_flat = topw.reshape(g, tg * k)
+
+    from .layers import constrain_moe_dispatch as _cmd
+
+    def expert_mlp(xs, wg, wu, wd):  # [g, n, cap, d] x [n, d, f] -> [g, n, cap, d]
+        xs = _cmd(xs)
+        h = jax.nn.silu(jnp.einsum("gscd,sdf->gscf", xs, wg)) * jnp.einsum(
+            "gscd,sdf->gscf", xs, wu
+        )
+        h = _cmd(h)
+        return _cmd(jnp.einsum("gscf,sfd->gscd", h, wd))
+
+    def dispatch_compute_combine(dest, n_slots, wg, wu, wd):
+        """bin -> gather -> expert mlp -> weighted scatter-back."""
+        bins, valid, loads, _ = jax.vmap(
+            lambda dd, rr: group_by_reducer(dd, rr, n_slots, cap)
+        )(dest, rows)
+        tok = bins[..., 0]  # [g, n_slots, cap]
+        choice = bins[..., 1]
+        xa = jax.vmap(lambda xv, tv: xv[tv])(x, tok)
+        xa = jnp.where(valid[..., None], xa, 0)
+        y = expert_mlp(xa, wg, wu, wd)
+        w_choice = jax.vmap(lambda wv, cv: wv[cv])(w_flat, choice).astype(y.dtype)
+        scatter_to = jnp.where(valid, tok, tg)
+        out = jax.vmap(
+            lambda yv, tv, wv: jnp.zeros((tg + 1, d), yv.dtype)
+            .at[tv]
+            .add(yv * wv[..., None])[:tg]
+        )(y, scatter_to, w_choice)
+        return out, valid, loads
+
+    w = blk["experts"]
+
+    def padded(arr):  # [E, ...] -> [E_pad, ...]
+        if e_pad == e:
+            return arr
+        return jnp.pad(arr, ((0, e_pad - e),) + ((0, 0),) * (arr.ndim - 1))
+
+    # primary slots: expert dim intact -> pure expert parallelism (no
+    # weight gather, E_pad tiles "model" evenly)
+    out, valid_p, loads = dispatch_compute_combine(
+        dest_p, e_pad,
+        padded(w["w_gate"]).astype(x.dtype),
+        padded(w["w_up"]).astype(x.dtype),
+        padded(w["w_down"]).astype(x.dtype),
+    )
+    n_valid = valid_p.sum()
+    if dest_x is not None:
+        # replica slots: the SharesSkew hot-expert replicas — gather only
+        # the few replicated experts' weights (the paper's "replicate the
+        # small side"); binned separately so no sharded-dim slicing occurs.
+        out_x, valid_x, loads_x = dispatch_compute_combine(
+            dest_x, extra_slots,
+            w["w_gate"][slot_expert_x].astype(x.dtype),
+            w["w_up"][slot_expert_x].astype(x.dtype),
+            w["w_down"][slot_expert_x].astype(x.dtype),
+        )
+        out = out + out_x
+        n_valid = n_valid + valid_x.sum()
+        loads = jnp.concatenate([loads, loads_x], axis=-1)
+
+    if cfg.n_shared:
+        gate = jax.nn.sigmoid(
+            (x @ blk["shared_gate"].astype(x.dtype)).astype(jnp.float32)
+        ).astype(x.dtype)
+        out = out + gate * mlp(blk["shared"], x, cfg.act)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac = jnp.zeros(e, jnp.float32).at[topi.reshape(-1)].add(1.0) / (g * tg * k)
+    prob_mean = probs.reshape(-1, e).mean(0)
+    aux = e * jnp.sum(frac * prob_mean)
+
+    if return_stats:
+        dropped = g * tg * k - n_valid
+        stats = {
+            "dropped": dropped,
+            "drop_rate": dropped / (g * tg * k),
+            "slot_loads": loads.sum(0),
+            "aux_loss": aux,
+        }
+        return out, aux, stats
+    return out, aux
+
+
+# ------------------------------------------------------------- full model
+def _block_apply(cfg, cap_factor, extra_slots, expert_pad, blk, x, is_global):
+    from .layers import constrain_activations
+
+    x = constrain_activations(x)
+    h = apply_norm(cfg.norm, blk["ln1"], x)
+    x = x + attention(blk["attn"], attn_config(cfg), h, is_global)
+    h = apply_norm(cfg.norm, blk["ln2"], x)
+    y, aux = moe_ffn(blk, h, cfg, cap_factor, extra_slots, expert_pad)
+    return x + y, aux
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    prefix_embeds=None,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    capacity_factor: float = 1.25,
+    extra_slots: int = 0,
+    expert_pad: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (hidden, mean aux loss)."""
+    x = embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    body = partial(_block_apply, cfg, capacity_factor, extra_slots, expert_pad)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def step(x, scanned):
+        blk, flag = scanned
+        x, aux = body(blk, x, flag)
+        return x, aux
+
+    x, auxs = jax.lax.scan(step, x, (params["blocks"], _layer_flags(cfg)))
+    return apply_norm(cfg.norm, params["final_norm"], x), auxs.mean()
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    loss_chunk: int = 512,
+    capacity_factor: float = 1.25,
+    extra_slots: int = 0,
+    expert_pad: int = 0,
+    aux_coef: float = 0.01,
+) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    h, aux = forward_hidden(
+        cfg, params, tokens, batch.get("prefix_embeds"),
+        dtype=dtype, remat=remat,
+        capacity_factor=capacity_factor, extra_slots=extra_slots,
+        expert_pad=expert_pad,
+    )
+    ce = chunked_cross_entropy(
+        h[:, :-1, :], logits_table(cfg, params), tokens[:, 1:], chunk=loss_chunk
+    )
+    return ce + aux_coef * aux
+
+
+# ------------------------------------------------------------------ serving
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, cfg.n_kv, max_seq, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: dict,
+    tokens: jnp.ndarray,  # [B, 1]
+    pos: jnp.ndarray,
+    dtype=jnp.bfloat16,
+    capacity_factor: float = 2.0,
+    extra_slots: int = 0,
+    expert_pad: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    x = embed(params["embed"], tokens, dtype)
+    acfg = attn_config(cfg)
+
+    def step(x, scanned):
+        blk, flag, kc, vc = scanned
+        h = apply_norm(cfg.norm, blk["ln1"], x)
+        y, kc, vc = attention_decode(blk["attn"], acfg, h, kc, vc, pos, flag)
+        x = x + y
+        h = apply_norm(cfg.norm, blk["ln2"], x)
+        y, _ = moe_ffn(blk, h, cfg, capacity_factor, extra_slots, expert_pad)
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (params["blocks"], _layer_flags(cfg), cache["k"], cache["v"])
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1, :] @ logits_table(cfg, params).T.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}

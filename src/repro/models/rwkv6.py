@@ -1,0 +1,271 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — rwkv6-3b.
+
+Core recurrence per head (k-dim i, v-dim j):
+    y_t[j] = sum_i r_t[i] * (S[i,j] + u[i] * k_t[i] * v_t[j])
+    S[i,j] <- w_t[i] * S[i,j] + k_t[i] * v_t[j]
+with the *data-dependent* decay  w_t = exp(-exp(w0 + tanh(x W_A) W_B))  —
+the defining RWKV-6 feature (arXiv:2404.05892).  Token-shift interpolation
+uses learned per-channel mixing (the paper additionally LoRAs the mixing
+coefficients; simplification noted in DESIGN.md).
+
+The time scan is chunked: an outer checkpointed scan over chunks bounds
+backward-pass memory; the inner scan advances one token at a time.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+
+# tokens processed per scan step (perf knob; see _wkv_scan)
+_WKV_UNROLL = int(os.environ.get("REPRO_WKV_UNROLL", "8"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import (
+    _dense_init,
+    apply_norm,
+    chunked_cross_entropy,
+    embed,
+    init_embedding,
+    init_linear,
+    init_norm,
+    layer_norm,
+)
+
+_LORA = 64
+
+
+def init_block(key, cfg: ArchConfig) -> dict:
+    d, h, hd, f = cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    tm = {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": _dense_init(ks[0], (d, _LORA)),
+        "wB": _dense_init(ks[1], (_LORA, d), scale=0.01),
+        "Wr": _dense_init(ks[2], (d, d)),
+        "Wk": _dense_init(ks[3], (d, d)),
+        "Wv": _dense_init(ks[4], (d, d)),
+        "Wg": _dense_init(ks[5], (d, d)),
+        "Wo": _dense_init(ks[6], (d, d)),
+        "u": jnp.zeros((h, hd), jnp.float32),
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+    }
+    cm = {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "Wk": _dense_init(ks[7], (d, f)),
+        "Wv": _dense_init(ks[8], (f, d)),
+        "Wr": _dense_init(ks[9], (d, d)),
+    }
+    return {
+        "ln1": init_norm("layer", d),
+        "tm": tm,
+        "ln2": init_norm("layer", d),
+        "cm": cm,
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [init_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model),
+        "ln0": init_norm("layer", cfg.d_model),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": init_norm("layer", cfg.d_model),
+        "lm_head": init_linear(keys[-2], cfg.d_model, cfg.vocab),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Previous-token version of x; ``prev`` is the carried last token."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(
+    r, k, v, w, u, s0, chunk: int, unroll: int = 8
+):  # all [B, L, H, hd] except u [H, hd]; s0 [B, H, hd, hd] f32
+    """Chunked + token-blocked wkv recurrence.
+
+    ``unroll`` tokens are processed per scan step (§Perf iteration: the
+    [B,H,hd,hd] state round-trips HBM once per *block* instead of once per
+    token — an 8x cut of the dominant memory-roofline term); ``chunk``
+    bounds backward-pass memory via an outer checkpointed scan."""
+    b, l, h, hd = r.shape
+    chunk = min(chunk, l)
+    unroll = max(1, min(unroll, chunk))
+    if chunk % unroll:
+        unroll = 1
+    n_chunks = math.ceil(l / chunk)
+    pad = n_chunks * chunk - l
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w = z(r), z(k), z(v), jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    def to_chunks(a):  # [B, L, H, hd] -> [n, chunk/u, u, B, H, hd]
+        x = a.reshape(b, n_chunks, chunk // unroll, unroll, h, hd)
+        return x.transpose(1, 2, 3, 0, 4, 5)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    @jax.checkpoint
+    def outer(s, xs):
+        rx, kx, vx, wx = xs
+
+        def inner(s, step):
+            rt, kt, vt, wt = step  # [u, B, H, hd]
+            ys = []
+            for t in range(unroll):  # state stays on-chip across the block
+                kv = kt[t][..., :, None] * vt[t][..., None, :]
+                ys.append(
+                    jnp.einsum("bhi,bhij->bhj", rt[t], s + u[None, :, :, None] * kv)
+                )
+                s = wt[t][..., :, None] * s + kv
+            return s, jnp.stack(ys)
+
+        s, ys = jax.lax.scan(inner, s, (rx, kx, vx, wx))
+        return s, ys
+
+    s, ys = jax.lax.scan(outer, s0, (rc, kc, vc, wc))
+    # ys: [n, chunk/u, u, B, H, hd] -> [B, L, H, hd]
+    ys = ys.reshape(n_chunks * chunk, b, h, hd).transpose(1, 0, 2, 3)
+    return ys[:, :l], s
+
+
+def time_mix(tm: dict, x: jnp.ndarray, cfg: ArchConfig, s0=None, x_prev=None, chunk: int = 64):
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xs = _shift(x, x_prev)
+
+    def lerp(mu):
+        return x + (xs - x) * mu.astype(x.dtype)
+
+    r = (lerp(tm["mu_r"]) @ tm["Wr"].astype(x.dtype)).reshape(b, l, h, hd)
+    k = (lerp(tm["mu_k"]) @ tm["Wk"].astype(x.dtype)).reshape(b, l, h, hd)
+    v = (lerp(tm["mu_v"]) @ tm["Wv"].astype(x.dtype)).reshape(b, l, h, hd)
+    g = jax.nn.silu(lerp(tm["mu_g"]) @ tm["Wg"].astype(x.dtype))
+    lw = lerp(tm["mu_w"]).astype(jnp.float32)
+    w = jnp.exp(
+        -jnp.exp(
+            tm["w0"] + jnp.tanh(lw @ tm["wA"]) @ tm["wB"]
+        )
+    ).reshape(b, l, h, hd)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    # r/k/v scan-IO dtype is a perf knob (halves the AD-saved residual
+    # traffic); the state and decay stay f32 for numerical fidelity.
+    io = jnp.bfloat16 if os.environ.get("REPRO_WKV_IO_DTYPE") == "bf16" else jnp.float32
+    y, s = _wkv_scan(
+        r.astype(io), k.astype(io), v.astype(io),
+        w, tm["u"], s0, chunk, unroll=_WKV_UNROLL,
+    )
+    # per-head group norm: normalize within each head, scale per channel
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = (
+        yn.reshape(b, l, d) * tm["ln_x"]["scale"] + tm["ln_x"]["bias"]
+    ).astype(x.dtype)
+    out = (y.astype(x.dtype) * g) @ tm["Wo"].astype(x.dtype)
+    return out, s, x[:, -1]
+
+
+def channel_mix(cm: dict, x: jnp.ndarray, x_prev=None):
+    xs = _shift(x, x_prev)
+
+    def lerp(mu):
+        return x + (xs - x) * mu.astype(x.dtype)
+
+    k = jnp.square(jax.nn.relu(lerp(cm["mu_k"]) @ cm["Wk"].astype(x.dtype)))
+    v = k @ cm["Wv"].astype(x.dtype)
+    r = jax.nn.sigmoid(lerp(cm["mu_r"]) @ cm["Wr"].astype(x.dtype))
+    return r * v, x[:, -1]
+
+
+def _block_apply(cfg, chunk, blk, x):
+    from .layers import constrain_activations
+
+    x = constrain_activations(x)
+    h = apply_norm("layer", blk["ln1"], x)
+    y, _, _ = time_mix(blk["tm"], h, cfg, chunk=chunk)
+    x = x + y
+    h = apply_norm("layer", blk["ln2"], x)
+    y, _ = channel_mix(blk["cm"], h)
+    return x + y
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    prefix_embeds=None,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    chunk: int = 64,
+) -> jnp.ndarray:
+    x = embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    x = apply_norm("layer", params["ln0"], x)
+    body = partial(_block_apply, cfg, chunk)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def step(x, blk):
+        return body(blk, x), None
+
+    x, _ = jax.lax.scan(step, x, params["blocks"])
+    return apply_norm("layer", params["final_norm"], x)
+
+
+def loss_fn(cfg, params, batch, dtype=jnp.bfloat16, remat=True, loss_chunk=512):
+    tokens = batch["tokens"]
+    h = forward_hidden(cfg, params, tokens, dtype=dtype, remat=remat)
+    table = params["lm_head"]["w"].T
+    return chunked_cross_entropy(h[:, :-1, :], table, tokens[:, 1:], chunk=loss_chunk)
+
+
+# ------------------------------------------------------------------ serving
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    """Recurrent 'cache': O(1) in context length (the long_500k story)."""
+    l, b, h, hd, d = cfg.n_layers, batch, cfg.n_heads, cfg.hd, cfg.d_model
+    return {
+        "wkv": jnp.zeros((l, b, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((l, b, d), dtype),
+        "x_cm": jnp.zeros((l, b, d), dtype),
+    }
+
+
+def decode_step(cfg, params, state, tokens, pos=None, dtype=jnp.bfloat16):
+    """One token step; pos is unused (state is position-free)."""
+    x = embed(params["embed"], tokens, dtype)  # [B, 1, d]
+    x = apply_norm("layer", params["ln0"], x)
+
+    def step(x, scanned):
+        blk, s_wkv, x_tm, x_cm = scanned
+        h = apply_norm("layer", blk["ln1"], x)
+        y, s_wkv, last_tm = time_mix(blk["tm"], h, cfg, s0=s_wkv, x_prev=x_tm, chunk=1)
+        x = x + y
+        h = apply_norm("layer", blk["ln2"], x)
+        y, last_cm = channel_mix(blk["cm"], h, x_prev=x_cm)
+        x = x + y
+        return x, (s_wkv, last_tm, last_cm)
+
+    x, (wkv, x_tm, x_cm) = jax.lax.scan(
+        step, x, (params["blocks"], state["wkv"], state["x_tm"], state["x_cm"])
+    )
+    x = apply_norm("layer", params["final_norm"], x)
+    logits = (x[:, -1, :] @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+    return logits, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}

@@ -1,0 +1,236 @@
+"""Dense decoder/encoder transformer (covers command-r-plus, gemma3, olmo,
+granite, internvl2 backbone, hubert encoder).
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` (one
+compact HLO block regardless of depth) and per-layer remat.  Gemma-style
+5:1 local:global patterns are handled with a per-layer ``is_global`` flag
+threaded through the scan (mask arithmetic, no branching).  VLM/audio
+frontends are stubs: precomputed ``prefix_embeds`` are concatenated ahead of
+the token embeddings (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import (
+    AttnConfig,
+    apply_norm,
+    attention,
+    attention_decode,
+    chunked_cross_entropy,
+    embed,
+    init_attention,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    init_norm,
+    mlp,
+)
+
+
+def attn_config(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        causal=cfg.causal,
+        window=cfg.window or None,
+        qk_norm=cfg.qk_norm,
+        bias=cfg.attn_bias,
+    )
+
+
+def init_block(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(k1, attn_config(cfg)),
+        "ln2": init_norm(cfg.norm, cfg.d_model),
+        "mlp": init_mlp(
+            k2, cfg.d_model, cfg.d_ff,
+            gated=cfg.family != "audio",  # hubert uses plain gelu FFN
+            bias=cfg.attn_bias,
+        ),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [init_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model),
+        "blocks": stacked,
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.vocab)
+    return params
+
+
+def _block_apply(cfg: ArchConfig, blk: dict, x: jnp.ndarray, is_global) -> jnp.ndarray:
+    from .layers import constrain_activations
+
+    x = constrain_activations(x)
+    h = apply_norm(cfg.norm, blk["ln1"], x)
+    x = x + attention(blk["attn"], attn_config(cfg), h, is_global)
+    h = apply_norm(cfg.norm, blk["ln2"], x)
+    x = x + mlp(blk["mlp"], h, cfg.act)
+    return x
+
+
+def _layer_flags(cfg: ArchConfig) -> jnp.ndarray:
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.global_period:
+        return (idx + 1) % cfg.global_period == 0
+    return jnp.ones(cfg.n_layers, bool)
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray | None,  # [B, L]; None for pure-frontend (audio) input
+    prefix_embeds: jnp.ndarray | None = None,  # [B, P, d] (vlm/audio stub)
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+) -> jnp.ndarray:
+    """Token (+ prefix) embeddings -> final-norm hidden states [B, L*, d]."""
+    if tokens is None:
+        if prefix_embeds is None:
+            raise ValueError("need tokens and/or prefix_embeds")
+        x = prefix_embeds.astype(dtype)
+    else:
+        x = embed(params["embed"], tokens, dtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+        prefix_embeds = None  # consumed
+
+    body = partial(_block_apply, cfg)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def step(x, scanned):
+        blk, is_global = scanned
+        return body(blk, x, is_global), None
+
+    x, _ = jax.lax.scan(step, x, (params["blocks"], _layer_flags(cfg)))
+    return apply_norm(cfg.norm, params["final_norm"], x)
+
+
+def logits_table(cfg: ArchConfig, params: dict) -> jnp.ndarray:
+    """[V, d] readout table (tied embedding or untied head)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    return params["lm_head"]["w"].T
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    loss_chunk: int = 512,
+) -> jnp.ndarray:
+    """Next-token (or frame-label for encoders) cross entropy."""
+    tokens = batch.get("tokens")
+    h = forward_hidden(
+        cfg, params, tokens, batch.get("prefix_embeds"), dtype=dtype, remat=remat
+    )
+    if cfg.causal:
+        prefix = h.shape[1] - tokens.shape[1]
+        h_txt = h[:, prefix:, :]
+        inputs = h_txt[:, :-1, :]
+        labels = tokens[:, 1:]
+    else:
+        inputs, labels = h, batch["labels"]
+    return chunked_cross_entropy(
+        inputs, logits_table(cfg, params), labels, chunk=loss_chunk
+    )
+
+
+# ------------------------------------------------------------------ serving
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, cfg.n_kv, max_seq, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: dict,
+    tokens: jnp.ndarray,  # [B, 1]
+    pos: jnp.ndarray,  # [] tokens already in cache
+    dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, dict]:
+    """One autoregressive step; returns (logits [B, V], new cache)."""
+    x = embed(params["embed"], tokens, dtype)
+    flags = _layer_flags(cfg)
+
+    acfg = attn_config(cfg)
+
+    def step(x, scanned):
+        blk, is_global, kc, vc = scanned
+        h = apply_norm(cfg.norm, blk["ln1"], x)
+        y, kc, vc = attention_decode(blk["attn"], acfg, h, kc, vc, pos, is_global)
+        x = x + y
+        h = apply_norm(cfg.norm, blk["ln2"], x)
+        x = x + mlp(blk["mlp"], h, cfg.act)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (params["blocks"], flags, cache["k"], cache["v"])
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1, :] @ logits_table(cfg, params).T.astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, {"k": k_new, "v": v_new}
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # [B, L]
+    cache: dict,
+    dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill the cache with a full prompt; returns (last-position logits,
+    cache).  Implemented as full forward + cache write (inference-prefill)."""
+    x = embed(params["embed"], tokens, dtype)
+    flags = _layer_flags(cfg)
+    acfg = attn_config(cfg)
+
+    def step(x, scanned):
+        blk, is_global = scanned
+        h = apply_norm(cfg.norm, blk["ln1"], x)
+        # recompute k/v to store in cache
+        from .layers import _qkv, rotary_angles, apply_rotary
+
+        q, k, v = _qkv(blk["attn"], acfg, h)
+        cos, sin = rotary_angles(jnp.arange(h.shape[1]), acfg.head_dim, acfg.rope_theta)
+        k_rot = apply_rotary(k, cos, sin)
+        x = x + attention(blk["attn"], acfg, h, is_global)
+        h2 = apply_norm(cfg.norm, blk["ln2"], x)
+        x = x + mlp(blk["mlp"], h2, cfg.act)
+        return x, (k_rot.astype(dtype), v.astype(dtype))
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["blocks"], flags))
+    l = tokens.shape[1]
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=3),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=3),
+    }
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1, :] @ logits_table(cfg, params).T.astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, cache

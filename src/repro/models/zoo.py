@@ -1,0 +1,111 @@
+"""Uniform model API over the assigned architecture families.
+
+``build_model(cfg)`` dispatches on ``cfg.family`` and returns a ``ModelApi``
+whose members all share the same signatures, so the training loop, serving
+loop and dry-run treat every architecture identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import mamba2, moe, rwkv6, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init_params: Callable[[Any], dict]
+    loss_fn: Callable[..., jnp.ndarray]  # (params, batch, **kw) -> scalar
+    init_cache: Callable[..., dict] | None  # (batch, max_seq) -> cache
+    decode_step: Callable[..., tuple] | None  # (params, cache, tokens, pos)
+    forward_hidden: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: transformer.init_params(cfg, key),
+            loss_fn=lambda params, batch, **kw: transformer.loss_fn(cfg, params, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16: transformer.init_kv_cache(cfg, batch, max_seq, dtype),
+            decode_step=lambda params, cache, tokens, pos, **kw: transformer.decode_step(cfg, params, cache, tokens, pos, **kw),
+            forward_hidden=lambda params, batch, **kw: transformer.forward_hidden(
+                cfg, params, batch.get("tokens"), batch.get("prefix_embeds"), **kw
+            ),
+        )
+    if fam == "audio":  # encoder-only
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: transformer.init_params(cfg, key),
+            loss_fn=lambda params, batch, **kw: transformer.loss_fn(cfg, params, batch, **kw),
+            init_cache=None,
+            decode_step=None,
+            forward_hidden=lambda params, batch, **kw: transformer.forward_hidden(
+                cfg, params, batch.get("tokens"), batch.get("prefix_embeds"), **kw
+            ),
+        )
+    if fam == "moe":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: moe.init_params(cfg, key),
+            loss_fn=lambda params, batch, **kw: moe.loss_fn(cfg, params, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16: moe.init_kv_cache(cfg, batch, max_seq, dtype),
+            decode_step=lambda params, cache, tokens, pos, **kw: moe.decode_step(cfg, params, cache, tokens, pos, **kw),
+            forward_hidden=lambda params, batch, **kw: moe.forward_hidden(
+                cfg, params, batch["tokens"], batch.get("prefix_embeds"), **kw
+            ),
+        )
+    if fam == "ssm":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: rwkv6.init_params(cfg, key),
+            loss_fn=lambda params, batch, **kw: rwkv6.loss_fn(cfg, params, batch, **kw),
+            init_cache=lambda batch, max_seq=0, dtype=jnp.bfloat16: rwkv6.init_state(cfg, batch, dtype),
+            decode_step=lambda params, cache, tokens, pos=None, **kw: rwkv6.decode_step(cfg, params, cache, tokens, pos, **kw),
+            forward_hidden=lambda params, batch, **kw: rwkv6.forward_hidden(
+                cfg, params, batch["tokens"], **kw
+            ),
+        )
+    if fam == "hybrid":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: mamba2.init_params(cfg, key),
+            loss_fn=lambda params, batch, **kw: mamba2.loss_fn(cfg, params, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16: mamba2.init_state(cfg, batch, max_seq, dtype),
+            decode_step=lambda params, cache, tokens, pos, **kw: mamba2.decode_step(cfg, params, cache, tokens, pos, **kw),
+            forward_hidden=lambda params, batch, **kw: mamba2.forward_hidden(
+                cfg, params, batch["tokens"], **kw
+            ),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+def make_batch(cfg: ArchConfig, rng, batch: int, seq: int) -> dict:
+    """Synthetic batch with the right modality for the arch (stub frontends
+    provide precomputed frame/patch embeddings, per the brief)."""
+    import numpy as np
+
+    out: dict = {}
+    if cfg.family == "audio":
+        out["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)), dtype=jnp.bfloat16
+        )
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), dtype=jnp.int32
+        )
+        return out
+    out["tokens"] = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(batch, seq)), dtype=jnp.int32
+    )
+    if cfg.family == "vlm":
+        n_patch = min(64, max(8, seq // 4))
+        out["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, n_patch, cfg.d_model)), dtype=jnp.bfloat16
+        )
+    return out

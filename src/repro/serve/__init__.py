@@ -1,0 +1,4 @@
+"""Serving substrate: universal prefill/decode engine + bucketed scheduler."""
+from .engine import BucketServer, Completion, Request, greedy_generate, scan_prefill
+
+__all__ = ["BucketServer", "Completion", "Request", "greedy_generate", "scan_prefill"]

@@ -1,0 +1,122 @@
+"""Batched serving: universal scan-prefill, greedy decode, bucketed waves.
+
+Every family exposes (init_cache, decode_step); the engine builds on just
+that pair, so dense KV-cache models and recurrent-state models (RWKV6,
+Zamba2) serve through the same code.  Dense models additionally get the
+fast parallel prefill from ``models.transformer``.
+
+Scheduling: requests are grouped by prompt-length bucket into fixed-size
+waves (static shapes; XLA-friendly).  A wave = one prefill + N decode
+steps for the whole batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.zoo import ModelApi
+
+
+def scan_prefill(model: ModelApi, params, cache, prompts: jnp.ndarray, dtype=jnp.bfloat16):
+    """Feed a [B, L] prompt through decode_step one token at a time (works
+    for every family). Returns (last logits, cache)."""
+    b, l = prompts.shape
+
+    def step(cache, xs):
+        tok, pos = xs
+        logits, cache = model.decode_step(params, cache, tok[:, None], pos, dtype=dtype)
+        return cache, logits
+
+    toks = prompts.T  # [L, B]
+    poss = jnp.arange(l, dtype=jnp.int32)
+    cache, logits = jax.lax.scan(step, cache, (toks, poss))
+    return logits[-1], cache
+
+
+def greedy_generate(
+    model: ModelApi,
+    params,
+    prompts: np.ndarray,  # [B, L] equal-length prompts
+    max_new: int,
+    max_seq: int | None = None,
+    dtype=jnp.bfloat16,
+) -> np.ndarray:
+    """Greedy decoding; returns [B, max_new] generated tokens."""
+    b, l = prompts.shape
+    max_seq = max_seq or (l + max_new)
+    cache = model.init_cache(b, max_seq, dtype=dtype)
+    prompts_j = jnp.asarray(prompts, jnp.int32)
+
+    @jax.jit
+    def run(params, cache, prompts_j):
+        logits, cache = scan_prefill(model, params, cache, prompts_j, dtype)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def step(carry, pos):
+            cache, tok = carry
+            logits, cache = model.decode_step(params, cache, tok[:, None], pos, dtype=dtype)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (cache, nxt), tok
+
+        (_, last), toks = jax.lax.scan(
+            step, (cache, first), jnp.arange(l, l + max_new - 1, dtype=jnp.int32)
+        )
+        return jnp.concatenate([toks.T, last[:, None]], axis=1)
+
+    return np.asarray(run(params, cache, prompts_j))
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [L]
+    max_new: int
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray
+
+
+class BucketServer:
+    """Groups requests by prompt length, serves fixed-size waves."""
+
+    def __init__(self, model: ModelApi, params, max_batch: int = 8, dtype=jnp.bfloat16):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.dtype = dtype
+        self._queue: dict[int, list[Request]] = defaultdict(list)
+
+    def submit(self, req: Request) -> None:
+        self._queue[len(req.prompt)].append(req)
+
+    def run_wave(self) -> list[Completion]:
+        """Serve the fullest bucket (up to max_batch requests)."""
+        if not any(self._queue.values()):
+            return []
+        length = max(self._queue, key=lambda k: len(self._queue[k]))
+        reqs = self._queue[length][: self.max_batch]
+        self._queue[length] = self._queue[length][self.max_batch :]
+        prompts = np.stack([r.prompt for r in reqs])
+        max_new = max(r.max_new for r in reqs)
+        out = greedy_generate(
+            self.model, self.params, prompts, max_new, dtype=self.dtype
+        )
+        return [
+            Completion(uid=r.uid, tokens=out[i, : r.max_new])
+            for i, r in enumerate(reqs)
+        ]
+
+    def drain(self) -> list[Completion]:
+        done: list[Completion] = []
+        while any(self._queue.values()):
+            done.extend(self.run_wave())
+        return done

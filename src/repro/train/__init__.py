@@ -1,0 +1,33 @@
+"""Training substrate: optimizer, train step, checkpointing, elasticity."""
+from .checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+    restore_tree,
+    save_checkpoint,
+)
+from .compression import compressed_psum, compressed_tree_psum, init_residuals
+from .elastic import MeshPlan, PreemptionGuard, plan_mesh_shape, run_elastic_loop
+from .optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from .train_step import init_train_state, make_train_step
+
+__all__ = [
+    "AsyncCheckpointer",
+    "MeshPlan",
+    "OptConfig",
+    "PreemptionGuard",
+    "adamw_update",
+    "compressed_psum",
+    "compressed_tree_psum",
+    "init_opt_state",
+    "init_residuals",
+    "init_train_state",
+    "latest_step",
+    "load_checkpoint",
+    "make_train_step",
+    "plan_mesh_shape",
+    "restore_tree",
+    "run_elastic_loop",
+    "save_checkpoint",
+    "schedule",
+]

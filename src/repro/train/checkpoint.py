@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing: atomic save, N-kept, resharding restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json   (step, tree structure, shapes, dtypes)
+             arrays.npz      (flattened leaves keyed by path)
+         <dir>/LATEST        (atomic pointer file)
+
+Writes go to a temp dir then ``os.replace`` (atomic on POSIX), so a host
+dying mid-save can never corrupt the latest checkpoint.  Restore is
+mesh-agnostic: leaves come back as numpy and are ``jax.device_put`` onto
+whatever sharding the (possibly different-sized) new mesh prescribes —
+this is the elastic shrink/grow path.  ``AsyncCheckpointer`` overlaps the
+serialization with training (one in-flight save, back-pressure on the next).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    keep: int = 3,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def load_checkpoint(directory: str, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+    """Returns (step, flat path->array dict)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    return step, flat
+
+
+def restore_tree(template: Any, flat: dict[str, np.ndarray], shardings: Any = None) -> Any:
+    """Rebuild a pytree shaped like ``template`` from a flat checkpoint.
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding — each
+    leaf is device_put with its sharding (the resharding restore: the saved
+    mesh's layout is irrelevant, only the logical array matters)."""
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != model {np.shape(leaf)}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(paths[1], leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """One-in-flight background saver with back-pressure."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,40 @@
+"""Train-step factory shared by examples, launcher, and the dry-run.
+
+``make_train_step(model, opt_cfg)`` returns a pure (params, opt_state,
+batch) -> (params, opt_state, metrics) function ready for jax.jit with
+donated arguments.  MoE kwargs (capacity factor / SharesSkew extra slots)
+thread through to the model loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import ModelApi
+
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_train_step(
+    model: ModelApi,
+    opt_cfg: OptConfig,
+    loss_kwargs: dict | None = None,
+) -> Callable:
+    loss_kwargs = dict(loss_kwargs or {})
+
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, **loss_kwargs)
+        )(params)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: ModelApi, key) -> tuple[Any, dict]:
+    params = model.init_params(key)
+    return params, init_opt_state(params)

@@ -1,0 +1,154 @@
+"""Residual-join enumeration, subsumption, HH detection, planner (§4-§6)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Combination,
+    ORDINARY,
+    detect_heavy_hitters,
+    enumerate_combinations,
+    plan_plain_shares,
+    plan_shares_skew,
+    relevant_sizes,
+    three_way_paper,
+    two_way,
+)
+from repro.core.heavy_hitters import CountMinSketch, exact_heavy_hitters
+from repro.data import paper_2way, paper_3way
+
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------ heavy hitters
+def test_exact_heavy_hitters():
+    col = np.array([1, 1, 1, 2, 2, 3, 9, 9, 9, 9])
+    vals, counts = exact_heavy_hitters(col, 3)
+    assert vals.tolist() == [9, 1]
+    assert counts.tolist() == [4, 3]
+
+
+def test_count_min_sketch_upper_bound_and_merge():
+    rng = np.random.default_rng(1)
+    keys_a = rng.integers(0, 1000, 5000)
+    keys_b = np.concatenate([rng.integers(0, 1000, 3000), np.full(2000, 42)])
+    s1 = CountMinSketch(width=2048, depth=5, seed=0)
+    s2 = CountMinSketch(width=2048, depth=5, seed=0)
+    s1.update(keys_a)
+    s2.update(keys_b)
+    merged = s1.merge(s2)
+    true_count = int((keys_a == 42).sum() + (keys_b == 42).sum())
+    est = int(merged.estimate(np.array([42]))[0])
+    assert est >= true_count  # CMS never underestimates
+    assert est <= true_count + 0.02 * merged.total  # and is reasonably tight
+    vals, _ = merged.heavy_hitters(np.concatenate([keys_a, keys_b]), 1500)
+    assert 42 in vals.tolist()
+
+
+def test_detect_heavy_hitters_paper_3way():
+    data = paper_3way(np.random.default_rng(2))
+    q = three_way_paper()
+    hh = detect_heavy_hitters(q, data, threshold=100, candidate_attrs=("B", "C"))
+    assert set(hh["B"].tolist()) == {11, 13}
+    assert set(hh["C"].tolist()) == {17}
+
+
+# ------------------------------------------------------------- combinations
+def test_enumerate_combinations_count():
+    # paper §4.1: B with 2 HHs, C with 3 HHs -> 3 * 4 = 12 combinations
+    hh = {"B": np.array([1, 2]), "C": np.array([10, 20, 30])}
+    combos = enumerate_combinations(hh)
+    assert len(combos) == 12
+    # exactly one all-ordinary
+    assert sum(1 for c in combos if not c.pinned) == 1
+
+
+def test_enumerate_combinations_example5():
+    # Ex. 5: B has b1,b2; C has c1 -> 6 residual joins
+    hh = {"B": np.array([11, 13]), "C": np.array([17])}
+    assert len(enumerate_combinations(hh)) == 6
+
+
+def test_relevant_sizes_partition():
+    # §4.1: S(B,E,C) with B: 2 HH and C: 1 HH partitions into 3*2=6 disjoint
+    # pieces; all combos' S-sizes must sum to |S|.
+    data = paper_3way(np.random.default_rng(3))
+    q = three_way_paper()
+    hh = {"B": np.array([11, 13]), "C": np.array([17])}
+    combos = enumerate_combinations(hh)
+    s_total = sum(relevant_sizes(q, data, c, hh)["S"] for c in combos)
+    assert s_total == data["S"].shape[0]
+    # R(A,B) has only B -> its 3 pieces each counted once per C-type (2x)
+    r_total = sum(relevant_sizes(q, data, c, hh)["R"] for c in combos)
+    assert r_total == 2 * data["R"].shape[0]
+
+
+# ------------------------------------------------------------------ planner
+def test_plan_2way_has_two_residuals():
+    # §5.3: one residual without HH, one with the single HH
+    data = paper_2way(np.random.default_rng(4))
+    plan = plan_shares_skew(two_way(), data, q=500)
+    assert len(plan.residuals) == 2
+    pins = sorted(str(r.combo) for r in plan.residuals)
+    assert any("B=_" in p for p in pins)
+    assert any("B=7" in p for p in pins)
+    # HH residual: B pinned -> grid over A and C (Example 2's x*y rectangle)
+    hh_res = next(r for r in plan.residuals if r.combo.pinned)
+    assert set(hh_res.grid_attrs) <= {"A", "C"}
+    # capacity respected in expectation
+    for r in plan.residuals:
+        assert r.solution.cost / r.k_budget <= plan.q * 1.001
+
+
+def test_plan_3way_residual_count():
+    data = paper_3way(np.random.default_rng(5))
+    # q=100: B's HHs (~200 tuples each) and C's HH (~400) all exceed both the
+    # detection threshold and the subsumption bar -> Ex. 5/6's 3*2=6 residuals
+    plan = plan_shares_skew(three_way_paper(), data, q=100)
+    assert len(plan.residuals) == 6
+    assert set(plan.hh_values) == {"B", "C"}
+    # reducer id blocks must not overlap
+    spans = sorted((r.reducer_offset, r.reducer_offset + r.num_reducers) for r in plan.residuals)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0
+    assert plan.total_reducers == spans[-1][1]
+
+
+def test_subsumption_demotes_non_skewed_values():
+    # A "heavy hitter" that is barely above uniform should be demoted when
+    # the ordinary shares already spread it (paper §5.1 subsumption).
+    rng = np.random.default_rng(6)
+    n, domain = 5000, 50
+    data = {
+        "R": rng.integers(0, domain, size=(n, 2)).astype(np.int64),
+        "S": rng.integers(0, domain, size=(n, 2)).astype(np.int64),
+    }
+    # threshold low enough that common values qualify as "HH" spuriously
+    plan = plan_shares_skew(two_way(), data, q=2 * n, hh_threshold=n / domain * 1.2)
+    # with q = 2n the whole join fits one reducer: x_B = 1 -> every HH is
+    # harmless -> all demoted, single residual
+    assert len(plan.residuals) == 1
+    assert not plan.residuals[0].combo.pinned
+
+
+def test_plain_shares_baseline():
+    data = paper_2way(np.random.default_rng(7))
+    plan = plan_plain_shares(two_way(), data, k=32)
+    assert len(plan.residuals) == 1
+    r = plan.residuals[0]
+    # 2-way: B gets the whole share budget
+    assert r.solution.int_shares["B"] >= 1
+    assert r.num_reducers <= 32
+
+
+def test_plan_predicted_cost_close_to_theory():
+    # §9.1 theory: HH residual cost ~= 2 sqrt(k r s) over HH tuples
+    from repro.core import two_way_skew_cost
+
+    rng = np.random.default_rng(8)
+    data = paper_2way(rng, n_r=20000, n_s=2000)
+    plan = plan_shares_skew(two_way(), data, q=500)
+    hh_res = next(r for r in plan.residuals if r.combo.pinned)
+    r_hh, s_hh = hh_res.sizes["R"], hh_res.sizes["S"]
+    theory = two_way_skew_cost(r_hh, s_hh, hh_res.num_reducers)
+    assert hh_res.solution.int_cost == pytest.approx(theory, rel=0.35)

@@ -1,0 +1,206 @@
+"""Unit tests: share solver vs the paper's closed forms (§1.1, §3, §8)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    chain_cost,
+    chain_cost_equal_sizes,
+    chain_join,
+    chain_shares,
+    cycle_join,
+    dominated_attributes,
+    make_query,
+    share_attributes,
+    solve_k_for_capacity,
+    solve_shares,
+    subchain_budgets,
+    symmetric_cost,
+    symmetric_cost_equal_sizes,
+    symmetric_join,
+    three_chain_cost,
+    three_way_paper,
+    triangle,
+    triangle_cost,
+    triangle_shares,
+    two_way,
+    two_way_naive_cost,
+    two_way_skew_cost,
+    two_way_skew_shares,
+)
+
+
+# ---------------------------------------------------------------- dominance
+def test_dominance_three_chain():
+    # R(A,B) ⋈ S(B,C) ⋈ T(C,D): A dominated by B, D dominated by C (Ex. 3)
+    q = make_query({"R": ("A", "B"), "S": ("B", "C"), "T": ("C", "D")})
+    dom = dominated_attributes(q)
+    assert dom == {"A", "D"}
+    assert share_attributes(q) == ("B", "C")
+
+
+def test_dominance_two_way():
+    # R(A,B) ⋈ S(B,C): A and C dominated by B
+    q = two_way()
+    assert dominated_attributes(q) == {"A", "C"}
+    assert share_attributes(q) == ("B",)
+
+
+def test_dominance_paper_example8():
+    # J = R(A,B) ⋈ S(B,E,C) ⋈ T(C,D) (Ex. 8 case 1): A dom by B, D dom by C,
+    # E dom by B (and C).  Share attrs: B, C.
+    q = three_way_paper()
+    assert share_attributes(q) == ("B", "C")
+
+
+def test_dominance_with_pinned_hh():
+    # Ex. 8 case 2: B pinned (share 1) -> D and E dominated by C; A survives.
+    q = three_way_paper()
+    attrs = share_attributes(q, fixed_to_one={"B"})
+    assert set(attrs) == {"A", "C"}
+    # Ex. 8 case 4: C pinned -> A and E dominated by B; D survives.
+    attrs = share_attributes(q, fixed_to_one={"C"})
+    assert set(attrs) == {"B", "D"}
+    # Ex. 8 case 5: B and C pinned -> A, D, E all survive (nothing dominates).
+    attrs = share_attributes(q, fixed_to_one={"B", "C"})
+    assert set(attrs) == {"A", "D", "E"}
+
+
+def test_dominance_tie_break():
+    # R(A,B) ⋈ S(A,B): A and B occur in identical relation sets; exactly one
+    # survives (the first-declared).
+    q = make_query({"R": ("A", "B"), "S": ("A", "B")})
+    assert share_attributes(q) == ("A",)
+
+
+# ----------------------------------------------------------- 2-way closed form
+@pytest.mark.parametrize("r,s,k", [(1e6, 1e5, 64), (1e5, 1e5, 16), (5e4, 2e6, 256)])
+def test_two_way_skew_matches_solver(r, s, k):
+    # HH residual of R(A,B) ⋈ S(B,C) with B pinned: minimize ry + sx, xy = k
+    q = two_way()
+    sol = solve_shares(q, {"R": r, "S": s}, k, fixed_to_one={"B"})
+    assert sol.cost == pytest.approx(two_way_skew_cost(r, s, k), rel=1e-4)
+    x, y = two_way_skew_shares(r, s, k)
+    assert sol.shares["A"] == pytest.approx(x, rel=1e-3)
+    assert sol.shares["C"] == pytest.approx(y, rel=1e-3)
+
+
+def test_two_way_beats_naive():
+    r, s, k = 1e6, 1e5, 64
+    assert two_way_skew_cost(r, s, k) < two_way_naive_cost(r, s, k)
+
+
+# ------------------------------------------------------------ triangle (§3)
+def test_triangle_matches_solver():
+    r1, r2, r3, k = 1e5, 2e5, 1.5e5, 64
+    sol = solve_shares(triangle(), {"R1": r1, "R2": r2, "R3": r3}, k)
+    assert sol.cost == pytest.approx(triangle_cost(r1, r2, r3, k), rel=1e-4)
+    x1, x2, x3 = triangle_shares(r1, r2, r3, k)
+    assert sol.shares["X1"] == pytest.approx(x1, rel=1e-3)
+    assert sol.shares["X2"] == pytest.approx(x2, rel=1e-3)
+    assert sol.shares["X3"] == pytest.approx(x3, rel=1e-3)
+
+
+# --------------------------------------------------- 3-chain closed form (Ex 3)
+def test_three_chain_matches_solver():
+    r, s, t, k = 4e5, 1e5, 2e5, 100
+    q = make_query({"R": ("A", "B"), "S": ("B", "C"), "T": ("C", "D")})
+    sol = solve_shares(q, {"R": r, "S": s, "T": t}, k)
+    assert sol.cost == pytest.approx(three_chain_cost(r, s, t, k), rel=1e-4)
+
+
+# --------------------------------------------------------- chains (§8.1-8.2)
+@pytest.mark.parametrize("n,k", [(4, 256), (6, 4096)])
+def test_chain_equal_sizes_matches_solver(n, k):
+    r = 1e5
+    q = chain_join(n)
+    sizes = {f"R{i+1}": r for i in range(n)}
+    sol = solve_shares(q, sizes, k)
+    assert sol.cost == pytest.approx(chain_cost_equal_sizes(n, r, k), rel=1e-3)
+
+
+def test_chain_arbitrary_sizes_matches_solver():
+    sizes_list = [2e5, 1e5, 3e5, 1.5e5]
+    k = 4096.0
+    q = chain_join(4)
+    sizes = {f"R{i+1}": s for i, s in enumerate(sizes_list)}
+    sol = solve_shares(q, sizes, k)
+    assert sol.cost == pytest.approx(chain_cost(sizes_list, k), rel=1e-3)
+    shares = chain_shares(sizes_list, k)
+    assert math.prod(shares) == pytest.approx(k, rel=1e-6)
+    for a, expect in zip(("A1", "A2", "A3"), shares):
+        assert sol.shares[a] == pytest.approx(expect, rel=1e-2)
+
+
+def test_subchain_budgets_balance():
+    # paper §8.1 Lagrangean balance: (n_i-2) k_i^{(n_i-2)/n_i} equal over i
+    ns, k = [4, 6], 1 << 16
+    ks = subchain_budgets(ns, k)
+    assert math.prod(ks) == pytest.approx(k, rel=1e-6)
+    vals = [(n - 2) * kk ** ((n - 2) / n) / n for n, kk in zip(ns, ks)]
+    # with C_i = n_i the balance includes the coefficient: C_i alpha_i k^alpha
+    bal = [n * ((n - 2) / n) * kk ** ((n - 2) / n) for n, kk in zip(ns, ks)]
+    assert bal[0] == pytest.approx(bal[1], rel=1e-3)
+
+
+def test_subchain_degenerate_gets_one():
+    ks = subchain_budgets([2, 4], 256)
+    assert ks[0] == pytest.approx(1.0)
+    assert ks[1] == pytest.approx(256.0)
+
+
+# ------------------------------------------------------- symmetric joins (§8.3)
+@pytest.mark.parametrize("n,d,k", [(3, 2, 64), (4, 2, 256), (5, 3, 1024), (6, 4, 4096)])
+def test_symmetric_equal_sizes_matches_solver(n, d, k):
+    r = 1e5
+    q = symmetric_join(n, d)
+    sizes = {f"R{j+1}": r for j in range(n)}
+    sol = solve_shares(q, sizes, k)
+    assert sol.cost == pytest.approx(symmetric_cost_equal_sizes(n, d, r, k), rel=1e-3)
+    assert sol.cost == pytest.approx(symmetric_cost(n, d, [r] * n, k), rel=1e-3)
+
+
+def test_symmetric_arbitrary_sizes_matches_solver():
+    n, d, k = 4, 2, 256.0
+    sizes_list = [1e5, 1.5e5, 1e5, 1.5e5]  # balanced enough for interior optimum
+    q = symmetric_join(n, d)
+    sizes = {f"R{j+1}": s for j, s in enumerate(sizes_list)}
+    sol = solve_shares(q, sizes, k)
+    assert sol.cost == pytest.approx(symmetric_cost(n, d, sizes_list, k), rel=1e-3)
+
+
+def test_symmetric_beats_chain_scaling():
+    # §8.3 discussion: symmetric cost ∝ k^{1-d/n} decreases relative to chain
+    # cost ∝ k^{(n-2)/n} as d -> n.
+    n, r, k = 6, 1e5, 4096
+    assert symmetric_cost_equal_sizes(n, 5, r, k) < symmetric_cost_equal_sizes(n, 2, r, k)
+    assert symmetric_cost_equal_sizes(n, n - 1, r, k) < chain_cost_equal_sizes(n, r, k)
+
+
+# ----------------------------------------------------------- capacity rule (§4)
+def test_capacity_rule_two_way():
+    q = two_way()
+    sizes = {"R": 1e6, "S": 1e5}
+    qcap = 5e4
+    k, sol = solve_k_for_capacity(q, sizes, qcap, fixed_to_one={"B"})
+    assert sol.cost / k <= qcap
+    # minimality: k-1 must violate
+    if k > 1:
+        sol2 = solve_shares(q, sizes, k - 1, fixed_to_one={"B"})
+        assert sol2.cost / (k - 1) > qcap
+
+
+def test_capacity_fits_single_reducer():
+    q = two_way()
+    k, sol = solve_k_for_capacity(q, {"R": 10, "S": 10}, 1000)
+    assert k == 1
+
+
+# ------------------------------------------------------ integer rounding sanity
+def test_integer_shares_product_within_budget():
+    q = triangle()
+    sol = solve_shares(q, {"R1": 1e5, "R2": 3e5, "R3": 2e5}, 60)
+    prod = math.prod(sol.int_shares.values())
+    assert prod <= 60
+    assert sol.int_cost >= sol.cost * 0.5  # sane, not wildly off

@@ -1,0 +1,246 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, flat_join, histogram, reducer_join
+from repro.kernels.ref import (
+    attention_ref,
+    block_join_ref,
+    histogram_ref,
+    tiled_join_ref,
+)
+
+
+# ------------------------------------------------------------------ histogram
+@pytest.mark.parametrize("n", [1, 7, 256, 1000, 4096])
+@pytest.mark.parametrize("num_bins", [4, 64, 513])
+def test_histogram_shapes(n, num_bins):
+    rng = np.random.default_rng(n * 1000 + num_bins)
+    vals = rng.integers(-1, num_bins, size=n).astype(np.int32)  # incl. invalid
+    got = histogram(jnp.asarray(vals), num_bins)
+    want = histogram_ref(jnp.asarray(vals), num_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [16, 128, 1024])
+def test_histogram_block_invariance(block):
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100, size=777).astype(np.int32)
+    got = histogram(jnp.asarray(vals), 100, block=block)
+    want = np.bincount(vals, minlength=100)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ----------------------------------------------------------------- block join
+@pytest.mark.parametrize("k,cap_r,cap_s,c", [(1, 8, 8, 1), (4, 32, 16, 1), (3, 64, 64, 2), (8, 128, 32, 3)])
+def test_reducer_join_sweep(k, cap_r, cap_s, c):
+    rng = np.random.default_rng(k * 100 + cap_r + c)
+    rk = rng.integers(0, 10, size=(k, cap_r, c)).astype(np.int32)
+    sk = rng.integers(0, 10, size=(k, cap_s, c)).astype(np.int32)
+    rw = rng.integers(0, 5, size=(k, cap_r)).astype(np.int32)  # 0s = invalid
+    sw = rng.integers(0, 5, size=(k, cap_s)).astype(np.int32)
+    got_cnt, got_chk = reducer_join(*map(jnp.asarray, (rk, rw, sk, sw)))
+    want_cnt, want_chk = block_join_ref(*map(jnp.asarray, (rk, rw, sk, sw)))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(want_cnt))
+    np.testing.assert_array_equal(np.asarray(got_chk), np.asarray(want_chk))
+
+
+@pytest.mark.parametrize("n,m,bn,bm", [(100, 50, 32, 32), (513, 257, 128, 64), (1, 1, 8, 8)])
+def test_flat_join_sweep(n, m, bn, bm):
+    rng = np.random.default_rng(n + m)
+    rk = rng.integers(0, 20, size=(n, 1)).astype(np.int32)
+    sk = rng.integers(0, 20, size=(m, 1)).astype(np.int32)
+    rw = rng.integers(1, 7, size=n).astype(np.int32)
+    sw = rng.integers(1, 7, size=m).astype(np.int32)
+    got_cnt, got_chk = flat_join(
+        jnp.asarray(rk), jnp.asarray(rw), jnp.asarray(sk), jnp.asarray(sw),
+        block_n=bn, block_m=bm,
+    )
+    want_cnt, want_chk = tiled_join_ref(
+        jnp.asarray(rk), jnp.asarray(rw), jnp.asarray(sk), jnp.asarray(sw)
+    )
+    assert int(got_cnt) == int(want_cnt)
+    assert int(got_chk) == int(want_chk)
+
+
+def test_flat_join_wraparound_checksum():
+    # checksums intentionally wrap mod 2^32 — verify against python ints
+    n = 256
+    rk = np.zeros((n, 1), np.int32)
+    sk = np.zeros((n, 1), np.int32)
+    rw = np.full(n, 40_000, np.int32)
+    sw = np.full(n, 40_000, np.int32)
+    _, chk = flat_join(*map(jnp.asarray, (rk, rw, sk, sw)))
+    expect = (40_000 * 40_000 * n * n) % (1 << 32)
+    assert int(np.uint32(chk)) == expect
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize(
+    "b,h,hkv,l,d,causal",
+    [
+        (1, 2, 2, 128, 32, True),
+        (2, 4, 2, 128, 64, True),
+        (1, 8, 1, 256, 32, True),   # MQA
+        (2, 2, 2, 128, 32, False),
+        (1, 4, 4, 64, 16, True),
+    ],
+)
+def test_flash_attention_sweep(b, h, hkv, l, d, causal):
+    rng = np.random.default_rng(b * 100 + h + l)
+    q = rng.normal(size=(b, h, l, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, l, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, l, d)).astype(np.float32)
+    got = flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, block_q=64, block_k=64,
+    )
+    want = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_flash_attention_matches_uneven_blocks():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), dtype=jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=128)
+    b = flash_attention(q, k, v, causal=True, block_q=128, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("bh,l,hd,chunk", [(2, 32, 8, 16), (4, 64, 16, 64), (1, 128, 32, 32)])
+def test_wkv6_kernel_matches_ref(bh, l, hd, chunk):
+    from repro.kernels.wkv6 import wkv6_pallas, wkv6_ref
+
+    rng = np.random.default_rng(bh * 100 + l)
+    r = rng.normal(size=(bh, l, hd)).astype(np.float32)
+    k = rng.normal(size=(bh, l, hd)).astype(np.float32) * 0.3
+    v = rng.normal(size=(bh, l, hd)).astype(np.float32)
+    w = rng.uniform(0.6, 0.999, size=(bh, l, hd)).astype(np.float32)
+    u = rng.normal(size=(bh, hd)).astype(np.float32) * 0.1
+    got = wkv6_pallas(*map(jnp.asarray, (r, k, v, w, u)), chunk=chunk)
+    want = wkv6_ref(*map(jnp.asarray, (r, k, v, w, u)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_kernel_state_carries_across_chunks():
+    from repro.kernels.wkv6 import wkv6_pallas
+
+    rng = np.random.default_rng(0)
+    args = [
+        rng.normal(size=(1, 64, 8)).astype(np.float32) for _ in range(3)
+    ]
+    w = rng.uniform(0.8, 0.99, size=(1, 64, 8)).astype(np.float32)
+    u = rng.normal(size=(1, 8)).astype(np.float32)
+    one_chunk = wkv6_pallas(*map(jnp.asarray, (args[0], args[1], args[2], w, u)), chunk=64)
+    four_chunks = wkv6_pallas(*map(jnp.asarray, (args[0], args[1], args[2], w, u)), chunk=16)
+    np.testing.assert_allclose(np.asarray(one_chunk), np.asarray(four_chunks), rtol=1e-5, atol=1e-5)
+
+
+def test_wkv6_matches_model_scan():
+    """Kernel agrees with the model's chunked/unrolled training scan."""
+    from repro.kernels.wkv6 import wkv6_pallas
+    from repro.models.rwkv6 import _wkv_scan
+
+    rng = np.random.default_rng(1)
+    b, l, h, hd = 2, 64, 3, 8
+    r, k, v = (rng.normal(size=(b, l, h, hd)).astype(np.float32) for _ in range(3))
+    w = rng.uniform(0.7, 0.999, size=(b, l, h, hd)).astype(np.float32)
+    u = rng.normal(size=(h, hd)).astype(np.float32) * 0.1
+    s0 = np.zeros((b, h, hd, hd), np.float32)
+    y_scan, _ = _wkv_scan(*map(jnp.asarray, (r, k, v, w, u, s0)), chunk=16, unroll=4)
+    flat = lambda a: jnp.asarray(a.transpose(0, 2, 1, 3).reshape(b * h, l, hd))
+    u_flat = jnp.broadcast_to(jnp.asarray(u)[None], (b, h, hd)).reshape(b * h, hd)
+    y_kern = wkv6_pallas(flat(r), flat(k), flat(v), flat(w), u_flat, chunk=16)
+    y_kern = np.asarray(y_kern).reshape(b, h, l, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_scan), y_kern, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------- chunked jnp attention path
+@pytest.mark.parametrize("l,chunk,causal,window", [
+    (256, 64, True, None), (256, 128, False, None), (512, 128, True, 64),
+])
+def test_sdpa_chunked_matches_ref(l, chunk, causal, window):
+    """The scan-over-query-blocks path used for 32k prefill lowering must
+    agree with dense attention."""
+    from repro.models.layers import _sdpa_chunked
+
+    rng = np.random.default_rng(l + chunk)
+    b, h, hkv, d = 2, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, h, l, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, l, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, l, d)), jnp.float32)
+    eff = None if window is None else jnp.int32(window)
+    got = _sdpa_chunked(q, k, v, causal, eff, chunk, None)
+    # dense reference with the same mask
+    import math as _m
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, l, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) / _m.sqrt(d)
+    qp, kp = jnp.arange(l)[:, None], jnp.arange(l)[None, :]
+    mask = jnp.ones((l, l), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    want = jnp.einsum("bhgqk,bhkd->bhgqd", p, v).reshape(b, h, l, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_sdpa_chunked_grad_finite():
+    from repro.models.layers import _sdpa_chunked
+
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 8)), jnp.float32)
+    g = jax.grad(lambda q: _sdpa_chunked(q, k, v, True, None, 64, None).sum())(q)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_model_flash_path_matches_default(monkeypatch):
+    """REPRO_USE_FLASH=1 routes model attention through the Pallas kernel;
+    outputs must match the jnp path."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(
+        get_config("olmo-1b").reduced(), max_seq=128
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(21))
+    rng = np.random.default_rng(21)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 128)), jnp.int32)}
+    base = np.asarray(
+        model.forward_hidden(params, batch, dtype=jnp.float32, remat=False),
+        np.float32,
+    )
+    monkeypatch.setenv("REPRO_USE_FLASH", "1")
+    flash = np.asarray(
+        model.forward_hidden(params, batch, dtype=jnp.float32, remat=False),
+        np.float32,
+    )
+    np.testing.assert_allclose(flash, base, rtol=2e-4, atol=2e-4)

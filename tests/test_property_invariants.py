@@ -1,0 +1,156 @@
+"""Hypothesis property tests for system invariants.
+
+Invariants checked across randomized queries / data / skew:
+  * executor output (count, checksum) == host oracle — no lost or duplicated
+    join results, for any residual decomposition;
+  * measured shuffle == the planner's cost model, exactly;
+  * residual relevance masks partition every relation (each tuple belongs to
+    exactly one type combination per attribute);
+  * group_by_reducer never loses or duplicates tuples below capacity;
+  * speculative shard execution returns every shard exactly once.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    make_query,
+    plan_shares_skew,
+    relevant_mask,
+    three_way_paper,
+    two_way,
+)
+from repro.core.residual import Combination, ORDINARY, enumerate_combinations
+from repro.data import random_join_data
+from repro.mapreduce import oracle_join, predicted_comm, run_join
+from repro.mapreduce.local_join import group_by_reducer
+from repro.mapreduce.straggler import run_with_speculation
+
+QUERIES = {
+    "two_way": two_way(),
+    "three_way": three_way_paper(),
+    "chain3": make_query({"R": ("A", "B"), "S": ("B", "C"), "T": ("C", "D")}),
+}
+
+SETTINGS = dict(
+    deadline=None,
+    max_examples=12,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def join_case(draw):
+    qname = draw(st.sampled_from(sorted(QUERIES)))
+    query = QUERIES[qname]
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(20, 300))
+    domain = draw(st.integers(5, 200))
+    skew = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    skew_attr = None
+    hh_vals = None
+    frac = 0.0
+    if skew:
+        skew_attr = draw(st.sampled_from(query.join_attributes))
+        hh_vals = [int(v) for v in rng.integers(0, domain, size=draw(st.integers(1, 2)))]
+        frac = draw(st.floats(0.1, 0.6))
+    data = random_join_data(
+        rng, query, n_per_relation=n, domain=domain,
+        skew_attr=skew_attr, hh_values=hh_vals, hh_fraction=frac,
+    )
+    q_cap = draw(st.sampled_from([50, 120, 400]))
+    return query, data, q_cap
+
+
+@given(join_case())
+@settings(**SETTINGS)
+def test_executor_matches_oracle(case):
+    query, data, q_cap = case
+    plan = plan_shares_skew(query, data, q=q_cap)
+    res = run_join(query, data, plan, cap_factor=6.0)
+    count, checksum, _, _ = oracle_join(query, data)
+    assert res.overflow == 0
+    assert res.count == count
+    assert res.checksum == checksum
+    assert res.comm_tuples == predicted_comm(plan)
+
+
+@given(join_case())
+@settings(**SETTINGS)
+def test_residuals_partition_relations(case):
+    query, data, q_cap = case
+    plan = plan_shares_skew(query, data, q=q_cap)
+    hh = plan.hh_values
+    if not hh:
+        return
+    combos = enumerate_combinations(hh)
+    for rel in query.relations:
+        arr = np.asarray(data[rel.name])
+        # restrict combos to the types of attributes THIS relation contains:
+        # each tuple must match exactly one such restricted combination
+        own = [a for a in sorted(hh) if a in rel.attrs]
+        seen = set()
+        total = np.zeros(arr.shape[0], dtype=int)
+        for combo in combos:
+            cd = combo.as_dict()
+            key = tuple((a, cd[a]) for a in own)
+            if key in seen:
+                continue
+            seen.add(key)
+            restricted = Combination.of(dict(key) | {a: ORDINARY for a in sorted(hh) if a not in rel.attrs})
+            # relevant_mask only constrains attrs present in the relation
+            total += relevant_mask(arr, rel.attrs, restricted, hh).astype(int)
+        assert (total == 1).all()
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 64),
+    st.integers(1, 16),
+    st.integers(8, 128),
+)
+@settings(**SETTINGS)
+def test_group_by_reducer_conserves_tuples(seed, k, arity, m):
+    rng = np.random.default_rng(seed)
+    dests = rng.integers(-1, k, size=m).astype(np.int32)
+    rows = rng.integers(0, 1000, size=(m, arity)).astype(np.int32)
+    cap = int(m)  # cap >= any possible load -> zero overflow
+    import jax.numpy as jnp
+
+    bins, valid, loads, overflow = group_by_reducer(
+        jnp.asarray(dests), jnp.asarray(rows), k, cap
+    )
+    assert int(overflow) == 0
+    # loads count arrivals per reducer
+    expect_loads = np.bincount(dests[dests >= 0], minlength=k)
+    np.testing.assert_array_equal(np.asarray(loads), expect_loads)
+    # multiset of (dest, row) preserved
+    got = []
+    b, v = np.asarray(bins), np.asarray(valid)
+    for kk in range(k):
+        for c in range(cap):
+            if v[kk, c]:
+                got.append((kk, tuple(b[kk, c])))
+    want = [
+        (int(d), tuple(rows[i])) for i, d in enumerate(dests) if d >= 0
+    ]
+    assert sorted(got) == sorted(want)
+
+
+def test_speculation_covers_all_shards():
+    import time
+
+    def make(i):
+        def fn():
+            time.sleep(0.25 if i == 3 else 0.01)  # shard 3 straggles
+            return i * i
+        return fn
+
+    outcomes = run_with_speculation(
+        [make(i) for i in range(8)], max_workers=4, speculate_after=3.0
+    )
+    assert [o.shard_id for o in outcomes] == list(range(8))
+    assert [o.result for o in outcomes] == [i * i for i in range(8)]
+    assert any(o.speculated for o in outcomes)  # the straggler got a backup

@@ -1,0 +1,32 @@
+"""Roofline reader sanity: table builds from dry-run artifacts when present."""
+import os
+
+import pytest
+
+from benchmarks.roofline import ART_DIR, build_table, model_flops, render_markdown
+
+
+def test_model_flops_formulas():
+    # train: 6*N*D; decode: 2*N*batch — spot checks
+    mf = model_flops("olmo-1b", "train_4k")
+    assert 6.5e15 < mf < 9e15  # 6 * ~1.2B * 1.05M tokens
+    md = model_flops("olmo-1b", "decode_32k")
+    assert 2.5e11 < md < 4e11  # 2 * ~1.2B * 128
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(ART_DIR) or not os.listdir(ART_DIR),
+    reason="dry-run artifacts not generated",
+)
+def test_build_table_from_artifacts():
+    rows = build_table("pod16x16")
+    assert len(rows) == 40  # 10 archs x 4 shapes (ok + skipped)
+    ok = [r for r in rows if "skipped" not in r]
+    assert len(ok) == 32
+    for r in ok:
+        assert r["compute_s"] > 0
+        assert r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 < r["useful_ratio"] < 10
+    md = render_markdown(rows)
+    assert md.count("\n") == 41  # header + separator + 40 rows
