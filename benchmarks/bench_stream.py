@@ -1,0 +1,98 @@
+"""Streaming SharesSkew (DESIGN.md §6): drifting Zipf stream, drift-triggered
+replanning, comm vs an exact-HH replan-every-batch oracle.
+
+The workload shifts the Zipf mode of the join attribute mid-run.  Tracked:
+
+  * cumulative new-tuple shuffle volume of the streaming engine vs the
+    oracle that replans each batch from exact heavy hitters (the acceptance
+    target is a ratio <= 1.25);
+  * number of drift-triggered replans and migrated state;
+  * per-batch ingest wall time.
+
+Also writes ``BENCH_stream.json`` next to the repo root so the perf
+trajectory of the streaming path is recorded run over run.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import plan_shares_skew, two_way
+from repro.mapreduce import oracle_join, predicted_comm
+from repro.stream import StreamConfig, StreamingJoinEngine
+
+from .common import emit
+
+
+def _zipf_batch(rng, shift, n_r, n_s, domain, a=1.6):
+    b_r = ((rng.zipf(a, n_r) - 1) + shift) % domain
+    b_s = ((rng.zipf(a, n_s) - 1) + shift) % domain
+    r = np.stack([rng.integers(0, domain, n_r), b_r], 1).astype(np.int64)
+    s = np.stack([b_s, rng.integers(0, domain, n_s)], 1).astype(np.int64)
+    return {"R": r, "S": s}
+
+
+def main(out_json: str | None = "BENCH_stream.json") -> None:
+    rng = np.random.default_rng(0)
+    query = two_way()
+    n_r, n_s, domain = 1500, 400, 4000
+    n_batches, shift_at = 8, 4
+
+    eng = StreamingJoinEngine(
+        query, StreamConfig(q=120, decay=0.5, load_factor=2.0)
+    )
+    oracle_comm = 0
+    ingest_us = []
+    for i in range(n_batches):
+        # the drift: both the Zipf exponent and the heavy values' location
+        # shift mid-run
+        shift, a = (0, 2.0) if i < shift_at else (1300, 1.4)
+        batch = _zipf_batch(rng, shift, n_r, n_s, domain, a=a)
+        t0 = time.perf_counter()
+        eng.ingest(batch)
+        ingest_us.append((time.perf_counter() - t0) * 1e6)
+        oracle_plan = plan_shares_skew(query, batch, q=120)
+        oracle_comm += sum(predicted_comm(oracle_plan).values())
+
+    count, checksum, _, _ = oracle_join(query, eng.history_data())
+    assert (eng.total_count, eng.total_checksum) == (count, checksum), (
+        "streaming engine != concatenated oracle"
+    )
+    ratio = eng.cumulative_comm / max(1, oracle_comm)
+    assert ratio <= 1.25, f"comm ratio {ratio:.3f} exceeds 1.25x oracle"
+    assert eng.replan_count >= 1, "no drift replan fired on the shifted stream"
+
+    med_us = sorted(ingest_us)[len(ingest_us) // 2]
+    emit("stream_comm_ratio_vs_oracle", ratio * 1000,
+         f"engine={eng.cumulative_comm};oracle={oracle_comm};x1000")
+    emit("stream_replans", eng.replan_count,
+         f"migrated={eng.total_migrated};epochs={eng.plan_epoch + 1}")
+    emit("stream_ingest_wall", med_us,
+         f"batches={n_batches};total_count={eng.total_count}")
+
+    if out_json:
+        record = {
+            "bench": "stream",
+            "batches": n_batches,
+            "rows_per_batch": {"R": n_r, "S": n_s},
+            "comm_ratio_vs_oracle": ratio,
+            "engine_comm": eng.cumulative_comm,
+            "oracle_comm": oracle_comm,
+            "replans": eng.replan_count,
+            "migrated_tuples": eng.total_migrated,
+            "median_ingest_us": med_us,
+            "total_count": eng.total_count,
+            "replan_reasons": [
+                r.drift_reason for r in eng.reports if r.replanned and r.batch > 0
+            ],
+        }
+        path = pathlib.Path(out_json)
+        path.write_text(json.dumps(record, indent=2) + "\n")
+        print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ stderr-free stdout comments).  Mapping to the paper:
   bench_3way           -> Fig 3 / §9.2  (Shares vs SharesSkew, 3-way)
   bench_closed_forms   -> §8.1-8.3, §7.3 (chains, symmetric, lower bound)
   bench_moe_skew       -> beyond-paper  (SharesSkew expert dispatch)
+  bench_stream         -> beyond-paper  (streaming engine, BENCH_stream.json)
   roofline             -> §Roofline     (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -22,6 +23,7 @@ def main() -> None:
         bench_3way,
         bench_closed_forms,
         bench_moe_skew,
+        bench_stream,
         roofline,
     )
 
@@ -33,6 +35,7 @@ def main() -> None:
         bench_3way,
         bench_closed_forms,
         bench_moe_skew,
+        bench_stream,
         roofline,
     ):
         name = mod.__name__.split(".")[-1]

@@ -30,6 +30,7 @@ from .planner import (
     SharesSkewPlan,
     plan_plain_shares,
     plan_shares_skew,
+    plan_with_hh,
 )
 from .residual import (
     Combination,
@@ -77,6 +78,7 @@ __all__ = [
     "make_query",
     "plan_plain_shares",
     "plan_shares_skew",
+    "plan_with_hh",
     "prune_by_subsumption",
     "relevant_mask",
     "relevant_sizes",

@@ -14,6 +14,7 @@ count >= threshold, with threshold defaulting to the reducer capacity q
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -59,6 +60,14 @@ class CountMinSketch:
         self._b = rng.integers(0, _P, size=depth, dtype=np.int64)
         self.table = np.zeros((depth, width), dtype=np.int64)
         self.total = 0
+
+    @classmethod
+    def from_error(cls, eps: float, delta: float, seed: int = 0) -> "CountMinSketch":
+        """Smallest sketch with P[estimate - count > eps*N] <= delta:
+        width = ceil(e/eps), depth = ceil(ln 1/delta)."""
+        width = int(math.ceil(math.e / eps))
+        depth = int(math.ceil(math.log(1.0 / delta)))
+        return cls(width=width, depth=max(1, depth), seed=seed)
 
     def _buckets(self, keys: np.ndarray) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.int64)

@@ -55,6 +55,15 @@ class ResidualPlan:
     def num_reducers(self) -> int:
         return int(math.prod(self.grid_dims)) if self.grid_dims else 1
 
+    def int_replication(self, rel_attrs: tuple[str, ...]) -> int:
+        """How many reducers each tuple of a relation with ``rel_attrs`` is
+        sent to under the integer shares (the executor's exact model)."""
+        return math.prod(
+            self.solution.int_shares[a]
+            for a in self.grid_attrs
+            if a not in rel_attrs
+        )
+
     def describe(self) -> str:
         dims = ", ".join(f"{a}:{d}" for a, d in zip(self.grid_attrs, self.grid_dims))
         return (
@@ -119,6 +128,58 @@ def plan_shares_skew(
         sizes = relevant_sizes(query, data, combo, hh)
         if any(s == 0 for s in sizes.values()):
             continue  # empty residual join -> contributes no output
+        pinned = frozenset(combo.pinned)
+        k, sol = solve_k_for_capacity(query, sizes, q, pinned, k_max)
+        rp = ResidualPlan(combo, sizes, k, sol, offset)
+        residuals.append(rp)
+        offset += rp.num_reducers
+    return SharesSkewPlan(query, q, hh, tuple(residuals))
+
+
+def plan_with_hh(
+    query: JoinQuery,
+    data: Mapping[str, np.ndarray],
+    q: float,
+    hh_values: Mapping[str, np.ndarray],
+    max_hh_per_attr: int = 8,
+    k_max: int = 1 << 22,
+    max_combos: int = 1024,
+) -> SharesSkewPlan:
+    """SharesSkew stages 2-3 with an externally supplied heavy-hitter set.
+
+    The batch planner (``plan_shares_skew``) detects HHs by an exact scan of
+    ``data``; the streaming engine instead tracks HH candidates across
+    micro-batches with mergeable sketches (``repro.stream.sketch``) and plans
+    each epoch from that live set — ``data`` here is only the current
+    micro-batch, used for residual relevant sizes and share solving.
+    Candidate attrs are filtered to non-dominated share attributes and capped
+    at ``max_hh_per_attr`` (sketch order is assumed count-descending).
+
+    Unlike ``plan_shares_skew``, combinations empty on ``data`` are KEPT
+    (with a 1-reducer grid): the plan outlives the batch it was solved on,
+    and a residual with no relevant tuples today may receive tuples from a
+    later micro-batch — dropping it would silently lose join results.
+    """
+    candidates = share_attributes(query)
+    hh: dict[str, np.ndarray] = {}
+    for attr, vals in hh_values.items():
+        vals = np.asarray(vals, dtype=np.int64)
+        if attr in candidates and vals.size:
+            hh[attr] = vals[:max_hh_per_attr]
+    # the stream must never die mid-ingest on a rich HH set: trim the
+    # lowest-ranked candidates (sketch order is rate-descending) until the
+    # combination space fits, rather than raising like the batch planner
+    while math.prod(1 + len(v) for v in hh.values()) > max_combos:
+        widest = max(hh, key=lambda a: len(hh[a]))
+        if len(hh[widest]) <= 1:
+            hh.pop(widest)
+        else:
+            hh[widest] = hh[widest][:-1]
+
+    residuals: list[ResidualPlan] = []
+    offset = 0
+    for combo in enumerate_combinations(hh, max_combos):
+        sizes = relevant_sizes(query, data, combo, hh)
         pinned = frozenset(combo.pinned)
         k, sol = solve_k_for_capacity(query, sizes, q, pinned, k_max)
         rp = ResidualPlan(combo, sizes, k, sol, offset)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
   * ``histogram`` — heavy-hitter detection (one-hot block counting)
+  * ``cms_update`` — streaming Count-Min sketch increment (HH tracking)
   * ``reducer_join`` / ``flat_join`` — reduce-phase block equi-join
   * ``flash_attention`` — LM prefill attention (online softmax, GQA)
 
@@ -8,6 +9,6 @@ Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU via interpret mode against the pure-jnp oracles in
 ``ref.py``.
 """
-from .ops import flash_attention, flat_join, histogram, reducer_join
+from .ops import cms_update, flash_attention, flat_join, histogram, reducer_join
 
-__all__ = ["flash_attention", "flat_join", "histogram", "reducer_join"]
+__all__ = ["cms_update", "flash_attention", "flat_join", "histogram", "reducer_join"]

@@ -14,12 +14,21 @@ import jax.numpy as jnp
 from .block_join import block_join_pallas, tiled_join_pallas
 from .flash_attention import flash_attention_pallas
 from .histogram import histogram_pallas
+from .sketch_update import cms_update_pallas
 
 
 @partial(jax.jit, static_argnames=("num_bins", "block"))
 def histogram(values: jnp.ndarray, num_bins: int, block: int = 1024) -> jnp.ndarray:
     """Counts of each value in [0, num_bins); negatives ignored."""
     return histogram_pallas(values, num_bins, block=block)
+
+
+@partial(jax.jit, static_argnames=("seeds", "width", "block"))
+def cms_update(
+    values: jnp.ndarray, seeds: tuple[int, ...], width: int, block: int = 512
+) -> jnp.ndarray:
+    """[depth, width] Count-Min table increment for one batch of int32 keys."""
+    return cms_update_pallas(values, seeds, width, block=block)
 
 
 @jax.jit

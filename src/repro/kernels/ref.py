@@ -18,6 +18,21 @@ def histogram_ref(values: jnp.ndarray, num_bins: int) -> jnp.ndarray:
     )
 
 
+def cms_update_ref(
+    values: jnp.ndarray, seeds: tuple[int, ...], width: int
+) -> jnp.ndarray:
+    """[depth, width] bucket counts via the mix32 row family (all values valid)."""
+    out = []
+    for seed in seeds:
+        x = values.astype(jnp.uint32) ^ jnp.uint32(seed)
+        x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+        x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+        x = x ^ (x >> 16)
+        bucket = (x % jnp.uint32(width)).astype(jnp.int32)
+        out.append(histogram_ref(bucket, width))
+    return jnp.stack(out)
+
+
 def block_join_ref(
     r_keys: jnp.ndarray,  # [K, cap_r, C]
     r_weights: jnp.ndarray,  # [K, cap_r]

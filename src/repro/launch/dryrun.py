@@ -1,5 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# the dry-run analyses compiled artifacts on fake host devices; never let
+# jax grab a real accelerator (libtpu init hangs on non-TPU hosts)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run (brief deliverable (e)): lower + compile every
 (architecture x input shape) on the production meshes and extract the
@@ -223,6 +226,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str, extra_slots: 
             t2 = time.time()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax wraps in a list
+                cost = cost[0] if cost else None
             text = compiled.as_text()
         from repro.launch.hlo_analysis import analyze
 

@@ -154,11 +154,7 @@ def predicted_comm(plan: SharesSkewPlan) -> dict[str, int]:
     out: dict[str, int] = {r.name: 0 for r in plan.query.relations}
     for res in plan.residuals:
         for rel in plan.query.relations:
-            repl = 1
-            for a in res.grid_attrs:
-                if a not in rel.attrs:
-                    repl *= res.solution.int_shares[a]
-            out[rel.name] += res.sizes[rel.name] * repl
+            out[rel.name] += res.sizes[rel.name] * res.int_replication(rel.attrs)
     return out
 
 

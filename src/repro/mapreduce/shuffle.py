@@ -16,7 +16,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # newer jax exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat shard_map: the replication-check kwarg was renamed
+    check_rep -> check_vma across jax releases."""
+    try:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    except TypeError:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )
 
 from repro.core.planner import SharesSkewPlan
 from repro.core.schema import JoinQuery

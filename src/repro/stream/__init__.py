@@ -1,0 +1,24 @@
+"""Streaming SharesSkew: online micro-batch joins with drift-triggered
+replanning (DESIGN.md §6).
+
+  * ``sketch``  — decaying Count-Min + SpaceSaving heavy-hitter tracking
+  * ``drift``   — cost-model staleness checks for the running plan
+  * ``engine``  — stateful executor with carried reducer state
+"""
+from .drift import DriftDecision, DriftMonitor, plan_comm_on_batch, predicted_loads
+from .engine import BatchReport, StreamConfig, StreamingJoinEngine
+from .sketch import DecayingCountMin, HHSnapshot, SpaceSaving, StreamHHTracker
+
+__all__ = [
+    "BatchReport",
+    "DecayingCountMin",
+    "DriftDecision",
+    "DriftMonitor",
+    "HHSnapshot",
+    "SpaceSaving",
+    "StreamConfig",
+    "StreamingJoinEngine",
+    "StreamHHTracker",
+    "plan_comm_on_batch",
+    "predicted_loads",
+]

@@ -1,0 +1,391 @@
+"""Streaming SharesSkew: stateful micro-batch join executor (DESIGN.md §6).
+
+Semantics: after ingesting batches 1..T the engine has produced exactly the
+join of the concatenated input — same (count, checksum) fingerprint as
+``mapreduce.run_join`` / ``oracle_join`` on the concatenation — while each
+batch only ships its *new* tuples through the map phase (symmetric multiway
+hash join: reducers keep what they received; history is never re-shuffled
+except when a drift replan changes the reducer layout, which is a counted
+state migration).
+
+Per batch:
+  1. sketches observe the batch (``StreamHHTracker``, optionally via the
+     Pallas ``cms_update`` kernel);
+  2. the ``DriftMonitor`` re-evaluates the running plan's cost model
+     against the live sketch; on drift, ``plan_with_hh`` installs a fresh
+     plan and accumulated state is re-routed under it (migration);
+  3. new tuples are routed with ``mapreduce.keys.map_phase`` — the same
+     vectorized recursive_keys used by the batch executor and the
+     distributed shuffle — and binned per reducer;
+  4. the join delta is the n-term telescoping expansion
+     Δ(R_1 ⋈ ... ⋈ R_n) = Σ_i  R_1^all ⋈ ... ⋈ R_{i-1}^all ⋈ ΔR_i
+                                ⋈ R_{i+1}^old ⋈ ... ⋈ R_n^old
+     evaluated with ``mapreduce.local_join.local_join_count_checksum`` over
+     (old | new | merged) per-reducer bins, so counts and orderless
+     checksums accumulate associatively mod 2^32.
+
+``recompute_distributed()`` replays the full accumulated input through
+``mapreduce.shuffle.run_distributed`` under the current plan — the
+cross-check that carried state lost nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import SharesSkewPlan, plan_with_hh
+from repro.core.schema import JoinQuery
+from repro.mapreduce.keys import map_phase
+from repro.mapreduce.local_join import LocalJoinSpec, local_join_count_checksum
+
+from .drift import DriftDecision, DriftMonitor
+from .sketch import StreamHHTracker
+
+_MASK32 = 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Tuning knobs for the streaming engine."""
+
+    q: float  # per-reducer capacity the plans are solved for
+    hh_threshold: float | None = None  # per-batch HH rate threshold (default q)
+    decay: float = 0.5  # sketch EMA decay per batch
+    sketch_width: int = 2048
+    sketch_depth: int = 4
+    ss_capacity: int = 64
+    max_hh_per_attr: int = 8
+    comm_factor: float = 1.5  # comm drift trigger
+    load_factor: float = 3.0  # overload drift trigger
+    fade_factor: float = 0.25  # wasted-replication (faded pin) drift trigger
+    cooldown: int = 1  # batches after a replan during which drift is ignored
+    use_device_sketch: bool = False  # route CMS updates through the Pallas kernel
+    sketch_seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchReport:
+    """Telemetry for one ingested micro-batch."""
+
+    batch: int  # 0-based batch index
+    plan_epoch: int  # increments at every replan
+    replanned: bool
+    drift_reason: str  # why the replan fired ("" otherwise)
+    delta_count: int  # join results contributed by this batch
+    total_count: int  # cumulative join count
+    total_checksum: int  # cumulative orderless checksum (mod 2^32)
+    comm_tuples: dict[str, int]  # new tuples shipped this batch, per relation
+    cumulative_comm: int  # all new-tuple shipments so far (excl. migration)
+    migrated_tuples: int  # state re-routed by this batch's replan (0 if none)
+    max_load: int  # worst per-reducer arrivals this plan epoch
+    hh_values: dict[str, list[int]]  # live plan's pinned HH set
+
+    @property
+    def total_comm(self) -> int:
+        return int(sum(self.comm_tuples.values()))
+
+
+def _group_np(
+    dest: np.ndarray, rows: np.ndarray, k: int, cap: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact host-side group_by_reducer (no capacity drops; cap must cover
+    the true max occupancy).  Returns (bins [k, cap, arity], valid [k, cap])."""
+    arity = rows.shape[1]
+    bins = np.zeros((k, cap, arity), dtype=np.int32)
+    valid = np.zeros((k, cap), dtype=bool)
+    if dest.size:
+        order = np.argsort(dest, kind="stable")
+        ds, rs = dest[order], rows[order]
+        first = np.searchsorted(ds, ds, side="left")
+        rank = (np.arange(ds.size) - first).astype(np.int64)
+        bins[ds, rank] = rs
+        valid[ds, rank] = True
+    return bins, valid
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+class StreamingJoinEngine:
+    """Online SharesSkew join over an unbounded micro-batch sequence."""
+
+    def __init__(
+        self,
+        query: JoinQuery,
+        config: StreamConfig,
+        log_fn: Callable[[str], None] | None = None,
+    ):
+        self.query = query
+        self.config = config
+        self.spec = LocalJoinSpec.from_query(query)
+        self.tracker = StreamHHTracker(
+            query,
+            width=config.sketch_width,
+            depth=config.sketch_depth,
+            capacity=config.ss_capacity,
+            decay=config.decay,
+            seed=config.sketch_seed,
+            use_device_sketch=config.use_device_sketch,
+        )
+        self.monitor = DriftMonitor(
+            config.q,
+            comm_factor=config.comm_factor,
+            load_factor=config.load_factor,
+            fade_factor=config.fade_factor,
+            cooldown=config.cooldown,
+        )
+        self.plan: SharesSkewPlan | None = None
+        self.plan_epoch = -1
+        self._log = log_fn or (lambda _msg: None)
+
+        # raw history (per relation, all batches) for replan migration
+        self._history: dict[str, list[np.ndarray]] = {
+            r.name: [] for r in query.relations
+        }
+        # carried reducer state under the CURRENT plan, kept binned:
+        # name -> (bins [k, cap, arity], valid [k, cap], occup [k]).
+        # Appending a batch is a host-side scatter at rank offsets — never a
+        # re-sort of history, and no per-shape device op churn; only a
+        # replan rebuilds from scratch.
+        self._state: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        self._loads: np.ndarray = np.zeros(0, dtype=np.int64)
+
+        self.total_count = 0
+        self.total_checksum = 0
+        self.cumulative_comm = 0
+        self.total_migrated = 0
+        self.reports: list[BatchReport] = []
+
+    # ---- internals ---------------------------------------------------------
+    def _threshold(self) -> float:
+        t = self.config.hh_threshold
+        return float(self.config.q if t is None else t)
+
+    def _route(self, rel, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """map_phase one relation; returns flat (dest, rows) of valid
+        emissions (the per-tuple replication already expanded)."""
+        arity = rows.shape[1]
+        if rows.shape[0] == 0:
+            return np.empty(0, np.int32), np.empty((0, arity), np.int32)
+        rows32 = jnp.asarray(rows.astype(np.int32))
+        dest = np.asarray(map_phase(self.plan, rel, rows32))  # [N, W]
+        n, w = dest.shape
+        flat_dest = dest.reshape(-1)
+        flat_rows = np.broadcast_to(
+            rows.astype(np.int32)[:, None, :], (n, w, arity)
+        ).reshape(-1, arity)
+        ok = flat_dest >= 0
+        return flat_dest[ok].astype(np.int32), flat_rows[ok]
+
+    def _empty_state(
+        self, arity: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        k = self.plan.total_reducers
+        return (
+            np.zeros((k, 1, arity), np.int32),
+            np.zeros((k, 1), bool),
+            np.zeros(k, np.int64),
+        )
+
+    def _scatter_into(
+        self,
+        state: tuple[np.ndarray, np.ndarray, np.ndarray],
+        dest: np.ndarray,
+        rows: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Append emissions to a binned state: slot = rank-in-group + current
+        occupancy.  Grows cap (pow2) when a reducer's bin fills."""
+        bins, valid, occup = state
+        k = bins.shape[0]
+        if dest.size == 0:
+            return state
+        counts = np.bincount(dest, minlength=k)
+        new_occup = occup + counts
+        cap = bins.shape[1]
+        cap_needed = int(new_occup.max())
+        if cap_needed > cap:
+            new_cap = _pow2(cap_needed)
+            bins = np.pad(bins, ((0, 0), (0, new_cap - cap), (0, 0)))
+            valid = np.pad(valid, ((0, 0), (0, new_cap - cap)))
+        else:
+            bins, valid = bins.copy(), valid.copy()
+        order = np.argsort(dest, kind="stable")
+        ds, rs = dest[order], rows[order]
+        first = np.searchsorted(ds, ds, side="left")
+        rank = np.arange(ds.size) - first + occup[ds]
+        bins[ds, rank] = rs
+        valid[ds, rank] = True
+        return bins, valid, new_occup
+
+    def _install(self, plan: SharesSkewPlan, batch: dict[str, np.ndarray]) -> int:
+        """Switch to ``plan``; re-route accumulated history under it.
+        Returns the number of migrated emissions."""
+        self.plan = plan
+        self.plan_epoch += 1
+        self.monitor.install(plan, self.query, batch)
+        self._loads = np.zeros(plan.total_reducers, dtype=np.int64)
+        migrated = 0
+        for rel in self.query.relations:
+            state = self._empty_state(rel.arity)
+            hist = self._history[rel.name]
+            if hist:
+                rows = np.concatenate(hist, axis=0)
+                dest, emitted = self._route(rel, rows)
+                state = self._scatter_into(state, dest, emitted)
+                migrated += int(dest.size)
+                if dest.size:
+                    self._loads += np.bincount(dest, minlength=plan.total_reducers)
+            self._state[rel.name] = state
+        self.total_migrated += migrated
+        return migrated
+
+    def _delta_join(
+        self,
+        new_dest: dict[str, np.ndarray],
+        new_rows: dict[str, np.ndarray],
+    ) -> tuple[int, int]:
+        """Telescoping incremental join of the new emissions against carried
+        state, then fold the batch into the state.  Returns
+        (delta_count, delta_checksum)."""
+        k = self.plan.total_reducers
+        variants: dict[str, dict[str, tuple[jnp.ndarray, jnp.ndarray]]] = {}
+        merged: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        for rel in self.query.relations:
+            nm = rel.name
+            nd, nrows = new_dest[nm], new_rows[nm]
+            ncap = _pow2(max(int(np.bincount(nd, minlength=k).max()) if nd.size else 0, 1))
+            nbins, nvalid = _group_np(nd, nrows, k, ncap)
+            obins, ovalid, _ = self._state[nm]
+            merged[nm] = self._scatter_into(self._state[nm], nd, nrows)
+            variants[nm] = {
+                "old": (jnp.asarray(obins), jnp.asarray(ovalid)),
+                "new": (jnp.asarray(nbins), jnp.asarray(nvalid)),
+                "all": (jnp.asarray(merged[nm][0]), jnp.asarray(merged[nm][1])),
+            }
+
+        names = [r.name for r in self.query.relations]
+        d_count, d_checksum = 0, 0
+        for i, nm_i in enumerate(names):
+            if new_dest[nm_i].size == 0:
+                continue  # ΔR_i empty -> term contributes nothing
+            bins, valids = {}, {}
+            for j, nm_j in enumerate(names):
+                key = "all" if j < i else ("new" if j == i else "old")
+                bins[nm_j], valids[nm_j] = variants[nm_j][key]
+            cnt, chk = local_join_count_checksum(self.spec, bins, valids)
+            d_count += int(cnt)
+            d_checksum = (d_checksum + int(np.uint32(chk))) & _MASK32
+        self._state.update(merged)
+        return d_count, d_checksum
+
+    # ---- public API --------------------------------------------------------
+    def ingest(self, batch: dict[str, np.ndarray]) -> BatchReport:
+        """Process one micro-batch; returns its telemetry."""
+        batch = {
+            r.name: np.asarray(batch[r.name]).reshape(-1, r.arity)
+            for r in self.query.relations
+        }
+        self.tracker.observe(batch)
+        snapshot = self.tracker.snapshot(
+            self._threshold(), self.config.max_hh_per_attr
+        )
+        hh = {a: s.values for a, s in snapshot.items()}
+
+        replanned, reason, migrated = False, "", 0
+        if self.plan is None:
+            plan = plan_with_hh(
+                self.query, batch, self.config.q, hh, self.config.max_hh_per_attr
+            )
+            migrated = self._install(plan, batch)
+            replanned, reason = True, "initial plan"
+        else:
+            pinned_rates = {
+                (a, int(v)): float(self.tracker.rate_of(a, np.array([v]))[0])
+                for a, vals in self.plan.hh_values.items()
+                for v in np.asarray(vals).tolist()
+            }
+            decision: DriftDecision = self.monitor.check(
+                self.plan, self.query, batch, snapshot, pinned_rates
+            )
+            if decision.replan:
+                plan = plan_with_hh(
+                    self.query, batch, self.config.q, hh, self.config.max_hh_per_attr
+                )
+                migrated = self._install(plan, batch)
+                replanned, reason = True, decision.reason
+                self._log(
+                    f"[stream] replan epoch={self.plan_epoch} ({reason}); "
+                    f"migrated {migrated} emissions"
+                )
+
+        # route the new batch under the (possibly fresh) plan
+        new_dest, new_rows, comm = {}, {}, {}
+        for rel in self.query.relations:
+            d, r = self._route(rel, batch[rel.name])
+            new_dest[rel.name], new_rows[rel.name] = d, r
+            comm[rel.name] = int(d.size)
+            if d.size:
+                self._loads += np.bincount(d, minlength=self.plan.total_reducers)
+
+        d_count, d_checksum = self._delta_join(new_dest, new_rows)
+        self.total_count += d_count
+        self.total_checksum = (self.total_checksum + d_checksum) & _MASK32
+        self.cumulative_comm += sum(comm.values())
+
+        # raw rows are kept only for replan migration; the binned reducer
+        # state was already folded by _delta_join
+        for rel in self.query.relations:
+            self._history[rel.name].append(batch[rel.name])
+
+        report = BatchReport(
+            batch=len(self.reports),
+            plan_epoch=self.plan_epoch,
+            replanned=replanned,
+            drift_reason=reason,
+            delta_count=d_count,
+            total_count=self.total_count,
+            total_checksum=self.total_checksum,
+            comm_tuples=comm,
+            cumulative_comm=self.cumulative_comm,
+            migrated_tuples=migrated,
+            max_load=int(self._loads.max()) if self._loads.size else 0,
+            hh_values={
+                a: np.asarray(v).tolist() for a, v in self.plan.hh_values.items()
+            },
+        )
+        self.reports.append(report)
+        self._log(
+            f"[stream] batch {report.batch}: +{d_count} results "
+            f"(total {self.total_count}), comm {report.total_comm}, "
+            f"hh {report.hh_values or '{}'}"
+        )
+        return report
+
+    def history_data(self) -> dict[str, np.ndarray]:
+        """The concatenation of everything ingested so far."""
+        return {
+            r.name: (
+                np.concatenate(self._history[r.name], axis=0)
+                if self._history[r.name]
+                else np.zeros((0, r.arity), dtype=np.int64)
+            )
+            for r in self.query.relations
+        }
+
+    def recompute_distributed(self, **kwargs):
+        """Replay the full accumulated input through the distributed shuffle
+        under the current plan (correctness cross-check for carried state)."""
+        from repro.mapreduce.shuffle import run_distributed
+
+        if self.plan is None:
+            raise RuntimeError("no batches ingested yet")
+        return run_distributed(self.query, self.history_data(), self.plan, **kwargs)
+
+    @property
+    def replan_count(self) -> int:
+        """Drift-triggered replans (the initial plan does not count)."""
+        return sum(1 for r in self.reports if r.replanned) - (1 if self.reports else 0)

@@ -1,0 +1,262 @@
+"""Mergeable, decaying stream summaries for online heavy-hitter tracking
+(DESIGN.md §6).
+
+The batch planner sees all data up front and finds heavy hitters with one
+exact scan (``core.heavy_hitters.exact_heavy_hitters``).  A streaming join
+never sees "all data": the skew profile must be maintained incrementally
+and must *forget*, so a value that was heavy an hour ago stops forcing a
+pinned residual today.  Three layers:
+
+  * ``DecayingCountMin`` — a ``core.heavy_hitters.CountMinSketch`` with a
+    mix32 hash family (bit-identical on host numpy and on device via
+    ``kernels.cms_update``) and exponential decay: before each batch the
+    table is scaled by ``decay``, so counts converge to an EMA of per-batch
+    frequencies.  ``rate()`` is the bias-corrected per-batch rate estimate.
+  * ``SpaceSaving`` — Metwally et al.'s stream-summary with a fixed number
+    of counters; generates the candidate set (CMS alone cannot enumerate
+    which values to ask about).  Mergeable and decayable the same way.
+  * ``StreamHHTracker`` — per share-attribute SpaceSaving candidates plus
+    per (attribute, relation) DecayingCountMin rates, combined exactly like
+    the batch detector: a value is a live HH when its estimated per-batch
+    rate in ANY relation containing the attribute reaches the threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dominance import share_attributes
+from repro.core.heavy_hitters import CountMinSketch
+from repro.core.schema import JoinQuery
+from repro.mapreduce.hashing import bucket_np
+
+
+def _row_seeds(seed: int, depth: int) -> tuple[int, ...]:
+    """Per-row mix32 seeds, reproducible from one integer seed."""
+    rng = np.random.default_rng(seed)
+    return tuple(int(s) for s in rng.integers(1, (1 << 31) - 1, size=depth))
+
+
+class DecayingCountMin(CountMinSketch):
+    """Count-Min over the mix32 row family with exponential decay.
+
+    The bucket function matches ``kernels.cms_update`` bit-for-bit, so the
+    per-batch table increment can be produced on-device and absorbed here.
+    The table is float64: after ``step()`` it holds
+    ``sum_t decay^(T-t) * c_t`` per bucket — a geometric average whose
+    bias-corrected normalization ``(1-decay)/(1-decay^T)`` turns estimates
+    into per-batch rates.
+    """
+
+    def __init__(
+        self, width: int = 2048, depth: int = 4, seed: int = 0, decay: float = 0.5
+    ):
+        if not (0.0 < decay <= 1.0):
+            raise ValueError("decay must be in (0, 1]")
+        self.width = int(width)
+        self.depth = int(depth)
+        self.seeds = _row_seeds(seed, depth)
+        self.decay_factor = float(decay)
+        self.table = np.zeros((depth, width), dtype=np.float64)
+        self.total = 0.0
+        self.batches = 0
+
+    # mix32 family instead of the Mersenne universal hashes of the parent
+    def _buckets(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.int64)
+        return np.stack([bucket_np(keys, s, self.width) for s in self.seeds])
+
+    def step(self) -> None:
+        """Advance one batch boundary: decay everything seen so far."""
+        if self.decay_factor < 1.0:
+            self.table *= self.decay_factor
+            self.total *= self.decay_factor
+        self.batches += 1
+
+    def absorb(self, delta_table: np.ndarray, n: int) -> None:
+        """Add a [depth, width] increment (e.g. from ``kernels.cms_update``)."""
+        if delta_table.shape != self.table.shape:
+            raise ValueError("increment shape must match sketch table")
+        self.table += delta_table
+        self.total += float(n)
+
+    def rate(self, keys: np.ndarray) -> np.ndarray:
+        """Bias-corrected per-batch rate estimates (upper bounds)."""
+        if self.batches == 0:
+            return np.zeros(np.asarray(keys).size)
+        g = self.decay_factor
+        norm = 1.0 / self.batches if g >= 1.0 else (1.0 - g) / (1.0 - g**self.batches)
+        return self.estimate(keys) * norm
+
+    def merge(self, other: "DecayingCountMin") -> "DecayingCountMin":
+        if (self.width, self.depth) != (other.width, other.depth):
+            raise ValueError("sketch shapes must match to merge")
+        if self.seeds != other.seeds or self.decay_factor != other.decay_factor:
+            raise ValueError("sketch seeds/decay must match to merge")
+        out = DecayingCountMin(self.width, self.depth, decay=self.decay_factor)
+        out.seeds = self.seeds
+        out.table = self.table + other.table
+        out.total = self.total + other.total
+        out.batches = max(self.batches, other.batches)
+        return out
+
+
+class SpaceSaving:
+    """Stream-summary with ``capacity`` counters (Metwally et al. 2005).
+
+    Guarantees: every value with true (decayed) count > total/capacity is
+    retained; ``counts[v]`` overestimates by at most ``errors[v]``.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.counts: dict[int, float] = {}
+        self.errors: dict[int, float] = {}
+
+    def update(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        vals, cnts = np.unique(keys, return_counts=True)
+        # largest first so evictions never displace a bigger newcomer
+        order = np.argsort(-cnts, kind="stable")
+        for v, c in zip(vals[order].tolist(), cnts[order].tolist()):
+            if v in self.counts:
+                self.counts[v] += c
+            elif len(self.counts) < self.capacity:
+                self.counts[v] = float(c)
+                self.errors[v] = 0.0
+            else:
+                victim = min(self.counts, key=self.counts.__getitem__)
+                floor = self.counts.pop(victim)
+                self.errors.pop(victim)
+                self.counts[v] = floor + c
+                self.errors[v] = floor
+
+    def decay(self, factor: float) -> None:
+        for v in self.counts:
+            self.counts[v] *= factor
+            self.errors[v] *= factor
+
+    def merge(self, other: "SpaceSaving") -> "SpaceSaving":
+        out = SpaceSaving(self.capacity)
+        for src in (self, other):
+            for v, c in src.counts.items():
+                out.counts[v] = out.counts.get(v, 0.0) + c
+                out.errors[v] = out.errors.get(v, 0.0) + src.errors[v]
+        if len(out.counts) > out.capacity:
+            keep = sorted(out.counts, key=out.counts.__getitem__, reverse=True)
+            for v in keep[out.capacity :]:
+                del out.counts[v], out.errors[v]
+        return out
+
+    def candidates(self) -> tuple[np.ndarray, np.ndarray]:
+        """(values, counts) sorted by count descending."""
+        if not self.counts:
+            return np.empty(0, np.int64), np.empty(0, np.float64)
+        items = sorted(self.counts.items(), key=lambda kv: -kv[1])
+        vals = np.array([v for v, _ in items], dtype=np.int64)
+        cnts = np.array([c for _, c in items], dtype=np.float64)
+        return vals, cnts
+
+
+@dataclasses.dataclass(frozen=True)
+class HHSnapshot:
+    """Live heavy-hitter view for one attribute."""
+
+    attr: str
+    values: np.ndarray  # candidate values, rate-descending
+    rates: np.ndarray  # per-batch rate estimates (max over relations)
+
+
+class StreamHHTracker:
+    """Per-attribute HH candidate tracking across micro-batches.
+
+    ``observe(batch)`` decays all summaries one step and folds in the
+    batch's join-attribute columns; ``snapshot()`` returns, per share
+    attribute, candidates whose estimated per-batch rate crosses the
+    threshold — the streaming analogue of ``detect_heavy_hitters``.
+    """
+
+    def __init__(
+        self,
+        query: JoinQuery,
+        width: int = 2048,
+        depth: int = 4,
+        capacity: int = 64,
+        decay: float = 0.5,
+        seed: int = 0,
+        use_device_sketch: bool = False,
+    ):
+        self.query = query
+        self.attrs = share_attributes(query)
+        self.decay = float(decay)
+        self.use_device_sketch = bool(use_device_sketch)
+        self._ss = {a: SpaceSaving(capacity) for a in self.attrs}
+        self._cms: dict[tuple[str, str], DecayingCountMin] = {}
+        for a in self.attrs:
+            for rel in query.relations_of(a):
+                self._cms[(a, rel.name)] = DecayingCountMin(
+                    width, depth, seed=seed, decay=decay
+                )
+        self.batches = 0
+
+    def observe(self, batch: dict[str, np.ndarray]) -> None:
+        for cms in self._cms.values():
+            cms.step()
+        for a in self.attrs:
+            self._ss[a].decay(self.decay)
+        for a in self.attrs:
+            for rel in self.query.relations_of(a):
+                col = np.asarray(batch[rel.name])[:, rel.index_of(a)]
+                cms = self._cms[(a, rel.name)]
+                if self.use_device_sketch and col.size:
+                    import jax.numpy as jnp
+
+                    from repro.kernels import cms_update
+
+                    delta = np.asarray(
+                        cms_update(
+                            jnp.asarray(col, dtype=jnp.int32), cms.seeds, cms.width
+                        )
+                    )
+                    cms.absorb(delta.astype(np.float64), col.size)
+                else:
+                    cms.update(col)
+                self._ss[a].update(col)
+        self.batches += 1
+
+    def rate_of(self, attr: str, values: np.ndarray) -> np.ndarray:
+        """Max per-batch rate over relations containing ``attr``."""
+        values = np.asarray(values, dtype=np.int64)
+        if values.size == 0:
+            return np.empty(0, np.float64)
+        rates = [
+            self._cms[(attr, rel.name)].rate(values)
+            for rel in self.query.relations_of(attr)
+        ]
+        return np.max(np.stack(rates), axis=0)
+
+    def snapshot(self, threshold: float, max_per_attr: int = 8) -> dict[str, HHSnapshot]:
+        out: dict[str, HHSnapshot] = {}
+        for a in self.attrs:
+            cand, _ = self._ss[a].candidates()
+            if cand.size == 0:
+                continue
+            rates = self.rate_of(a, cand)
+            mask = rates >= threshold
+            if not mask.any():
+                continue
+            vals, rates = cand[mask], rates[mask]
+            order = np.argsort(-rates, kind="stable")[:max_per_attr]
+            out[a] = HHSnapshot(a, vals[order], rates[order])
+        return out
+
+    def hh_values(self, threshold: float, max_per_attr: int = 8) -> dict[str, np.ndarray]:
+        """The ``plan_with_hh``-shaped view of ``snapshot``."""
+        return {
+            a: s.values for a, s in self.snapshot(threshold, max_per_attr).items()
+        }

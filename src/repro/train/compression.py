@@ -47,7 +47,8 @@ def compressed_psum(
     q = jnp.clip(jnp.round(g / scale), -_LEVELS, _LEVELS)
     new_residual = g - q * scale  # error feedback
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size is absent on older jax; psum of 1 is equivalent
+    n = jax.lax.psum(jnp.int32(1), axis_name)
     return total.astype(jnp.float32) * scale / n, new_residual
 
 

@@ -5,10 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_attention, flat_join, histogram, reducer_join
+from repro.kernels import cms_update, flash_attention, flat_join, histogram, reducer_join
 from repro.kernels.ref import (
     attention_ref,
     block_join_ref,
+    cms_update_ref,
     histogram_ref,
     tiled_join_ref,
 )
@@ -32,6 +33,46 @@ def test_histogram_block_invariance(block):
     got = histogram(jnp.asarray(vals), 100, block=block)
     want = np.bincount(vals, minlength=100)
     np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ----------------------------------------------------------------- cms update
+@pytest.mark.parametrize("n", [1, 100, 777, 4096])
+@pytest.mark.parametrize("width", [64, 257, 1024])
+def test_cms_update_shapes(n, width):
+    rng = np.random.default_rng(n + width)
+    vals = rng.integers(0, 1 << 20, size=n).astype(np.int32)
+    seeds = (11, 222, 3333)
+    got = cms_update(jnp.asarray(vals), seeds, width)
+    want = cms_update_ref(jnp.asarray(vals), seeds, width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every key lands in exactly one bucket per row
+    np.testing.assert_array_equal(np.asarray(got).sum(axis=1), n)
+
+
+@pytest.mark.parametrize("block", [16, 128, 512])
+def test_cms_update_block_invariance(block):
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 10_000, size=1000).astype(np.int32)
+    seeds = (5, 55)
+    got = cms_update(jnp.asarray(vals), seeds, 128, block=block)
+    want = cms_update_ref(jnp.asarray(vals), seeds, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cms_update_matches_host_buckets():
+    """Device buckets agree bit-for-bit with the host mix32 family that the
+    streaming sketches use (repro.mapreduce.hashing.bucket_np)."""
+    from repro.mapreduce.hashing import bucket_np
+
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 1 << 30, size=513).astype(np.int64)
+    seeds = (17, 1717, 171717)
+    width = 251
+    got = np.asarray(cms_update(jnp.asarray(vals, jnp.int32), seeds, width))
+    want = np.stack(
+        [np.bincount(bucket_np(vals, s, width), minlength=width) for s in seeds]
+    )
+    np.testing.assert_array_equal(got, want)
 
 
 # ----------------------------------------------------------------- block join

@@ -11,6 +11,8 @@ Invariants checked across randomized queries / data / skew:
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -150,8 +150,10 @@ def test_compressed_psum_error_feedback():
     # error feedback (residual telescopes)
     import jax
 
+    from repro.mapreduce.shuffle import shard_map
+
     def step(g, r):
-        return jax.shard_map(
+        return shard_map(
             lambda gg, rr: compressed_psum(gg, rr, "x"),
             mesh=jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",)),
             in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
