@@ -1,16 +1,28 @@
-"""Streaming SharesSkew (DESIGN.md §6): drifting Zipf stream, drift-triggered
-replanning, comm vs an exact-HH replan-every-batch oracle.
+"""Streaming SharesSkew (DESIGN.md §6-§7): drifting Zipf stream, drift-
+triggered replanning, fused vs baseline ingest.
 
-The workload shifts the Zipf mode of the join attribute mid-run.  Tracked:
+The workload shifts the Zipf mode of the join attribute mid-run.  Two
+engines consume the *same* pre-generated batches:
 
-  * cumulative new-tuple shuffle volume of the streaming engine vs the
-    oracle that replans each batch from exact heavy hitters (the acceptance
-    target is a ratio <= 1.25);
+  * baseline — sketch, ``map_phase`` routing, and the einsum delta join as
+    separate eager passes (the correctness oracle);
+  * fused    — the single-pass Pallas ingest kernel (``kernels.
+    ingest_fused``) plus the sorted merge-join delta (DESIGN.md §7).
+
+Tracked:
+
+  * cumulative new-tuple shuffle volume vs an exact-HH replan-every-batch
+    oracle (acceptance: ratio <= 1.25, identical for both engines);
   * number of drift-triggered replans and migrated state;
-  * per-batch ingest wall time.
+  * per-batch ingest wall time for both paths, the fused speedup (hard
+    gate: fused median must be >= 10x faster than the 852 ms baseline
+    median recorded at PR 5), and the modeled DMA/compute overlap profile
+    of the fused kernel.
 
-Also writes ``BENCH_stream.json`` next to the repo root so the perf
-trajectory of the streaming path is recorded run over run.
+``BENCH_stream.json`` (all fields documented in BENCHMARKS.md) records the
+trajectory run over run.  The fused engine counts its kernel passes; this
+bench fails loudly if that counter ever disagrees with the batch count —
+there is no silent fallback path, and this assertion keeps it that way.
 """
 from __future__ import annotations
 
@@ -21,10 +33,17 @@ import time
 import numpy as np
 
 from repro.core import plan_shares_skew, two_way
+from repro.kernels.ingest_fused import overlap_profile, route_width
 from repro.mapreduce import oracle_join, predicted_comm
+from repro.mapreduce.keys import static_route_table
 from repro.stream import StreamConfig, StreamingJoinEngine
 
 from .common import emit
+
+# the bench-host gate: PR 5 recorded median_ingest_us = 852574 on this
+# workload; the fused path must beat it by >= 10x
+RECORDED_BASELINE_US = 852_574.0
+FUSED_GATE_US = RECORDED_BASELINE_US / 10.0
 
 
 def _zipf_batch(rng, shift, n_r, n_s, domain, a=1.6):
@@ -35,43 +54,97 @@ def _zipf_batch(rng, shift, n_r, n_s, domain, a=1.6):
     return {"R": r, "S": s}
 
 
+def _median(xs: list[float]) -> float:
+    return sorted(xs)[len(xs) // 2]
+
+
 def main(out_json: str | None = "BENCH_stream.json") -> None:
     rng = np.random.default_rng(0)
     query = two_way()
     n_r, n_s, domain = 1500, 400, 4000
     n_batches, shift_at = 8, 4
+    rows_per_batch = n_r + n_s
 
-    eng = StreamingJoinEngine(
-        query, StreamConfig(q=120, decay=0.5, load_factor=2.0)
-    )
-    oracle_comm = 0
-    ingest_us = []
+    # identical batches for both engines: the drift moves both the Zipf
+    # exponent and the heavy values' location mid-run
+    batches = []
     for i in range(n_batches):
-        # the drift: both the Zipf exponent and the heavy values' location
-        # shift mid-run
         shift, a = (0, 2.0) if i < shift_at else (1300, 1.4)
-        batch = _zipf_batch(rng, shift, n_r, n_s, domain, a=a)
-        t0 = time.perf_counter()
-        eng.ingest(batch)
-        ingest_us.append((time.perf_counter() - t0) * 1e6)
-        oracle_plan = plan_shares_skew(query, batch, q=120)
-        oracle_comm += sum(predicted_comm(oracle_plan).values())
+        batches.append(_zipf_batch(rng, shift, n_r, n_s, domain, a=a))
 
-    count, checksum, _, _ = oracle_join(query, eng.history_data())
-    assert (eng.total_count, eng.total_checksum) == (count, checksum), (
+    def run(config: StreamConfig):
+        eng = StreamingJoinEngine(query, config)
+        us = []
+        for batch in batches:
+            t0 = time.perf_counter()
+            eng.ingest(batch)
+            us.append((time.perf_counter() - t0) * 1e6)
+        return eng, us
+
+    base, base_us = run(StreamConfig(q=120, decay=0.5, load_factor=2.0))
+    fused, fused_us = run(
+        StreamConfig(q=120, decay=0.5, load_factor=2.0, fused_ingest=True)
+    )
+
+    # ---- correctness gates -------------------------------------------------
+    count, checksum, _, _ = oracle_join(query, base.history_data())
+    assert (base.total_count, base.total_checksum) == (count, checksum), (
         "streaming engine != concatenated oracle"
     )
-    ratio = eng.cumulative_comm / max(1, oracle_comm)
-    assert ratio <= 1.25, f"comm ratio {ratio:.3f} exceeds 1.25x oracle"
-    assert eng.replan_count >= 1, "no drift replan fired on the shifted stream"
+    assert (fused.total_count, fused.total_checksum) == (count, checksum), (
+        "fused engine != concatenated oracle"
+    )
+    for i, (rb, rf) in enumerate(zip(base.reports, fused.reports)):
+        assert rb == rf, f"fused batch {i} report diverges from baseline"
+    assert fused.fused_batches == n_batches, (
+        f"fused engine ran the kernel on {fused.fused_batches}/{n_batches} "
+        "batches — the fused path silently fell back"
+    )
 
-    med_us = sorted(ingest_us)[len(ingest_us) // 2]
+    oracle_comm = 0
+    for batch in batches:
+        oracle_plan = plan_shares_skew(query, batch, q=120)
+        oracle_comm += sum(predicted_comm(oracle_plan).values())
+    ratio = base.cumulative_comm / max(1, oracle_comm)
+    assert ratio <= 1.25, f"comm ratio {ratio:.3f} exceeds 1.25x oracle"
+    assert base.replan_count >= 1, "no drift replan fired on the shifted stream"
+
+    # ---- perf gate ---------------------------------------------------------
+    base_med, fused_med = _median(base_us), _median(fused_us)
+    speedup = base_med / fused_med
+    assert fused_med < FUSED_GATE_US, (
+        f"fused median ingest {fused_med / 1e3:.1f} ms misses the 10x gate "
+        f"({FUSED_GATE_US / 1e3:.1f} ms) vs the recorded "
+        f"{RECORDED_BASELINE_US / 1e3:.0f} ms baseline"
+    )
+
+    # modeled roofline of the fused pass under the final plan (R relation)
+    rel = query.relations[0]
+    profile = overlap_profile(
+        n_rows=n_r,
+        arity=rel.arity,
+        route_w=route_width(static_route_table(fused.plan, rel)),
+        num_reducers=fused.plan.total_reducers,
+        n_sketch_cols=1,
+        depth=fused.config.sketch_depth,
+        width=fused.config.sketch_width,
+        block=fused.config.fused_block,
+    )
+
     emit("stream_comm_ratio_vs_oracle", ratio * 1000,
-         f"engine={eng.cumulative_comm};oracle={oracle_comm};x1000")
-    emit("stream_replans", eng.replan_count,
-         f"migrated={eng.total_migrated};epochs={eng.plan_epoch + 1}")
-    emit("stream_ingest_wall", med_us,
-         f"batches={n_batches};total_count={eng.total_count}")
+         f"engine={base.cumulative_comm};oracle={oracle_comm};x1000")
+    emit("stream_replans", base.replan_count,
+         f"migrated={base.total_migrated};epochs={base.plan_epoch + 1}")
+    emit("stream_ingest_wall", base_med,
+         f"batches={n_batches};total_count={base.total_count}")
+    emit("stream_fused_ingest_wall", fused_med,
+         f"speedup={speedup:.1f}x;vs_recorded="
+         f"{RECORDED_BASELINE_US / fused_med:.1f}x")
+    for i, (bu, fu) in enumerate(zip(base_us, fused_us)):
+        replanned = base.reports[i].replanned
+        print(f"# batch {i}: baseline {bu / 1e3:8.1f} ms  "
+              f"fused {fu / 1e3:8.1f} ms"
+              f"{'  [replan]' if replanned else ''}")
 
     if out_json:
         record = {
@@ -79,14 +152,32 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
             "batches": n_batches,
             "rows_per_batch": {"R": n_r, "S": n_s},
             "comm_ratio_vs_oracle": ratio,
-            "engine_comm": eng.cumulative_comm,
+            "engine_comm": base.cumulative_comm,
             "oracle_comm": oracle_comm,
-            "replans": eng.replan_count,
-            "migrated_tuples": eng.total_migrated,
-            "median_ingest_us": med_us,
-            "total_count": eng.total_count,
+            "replans": base.replan_count,
+            "migrated_tuples": base.total_migrated,
+            # wall-clock AND per-row-normalized medians for both paths: the
+            # per-row figures stay comparable if the workload shape changes
+            "median_ingest_us": base_med,
+            "median_ingest_ns_per_row": base_med * 1e3 / rows_per_batch,
+            "fused_median_ingest_us": fused_med,
+            "fused_median_ingest_ns_per_row": fused_med * 1e3 / rows_per_batch,
+            "fused_speedup": speedup,
+            "fused_speedup_vs_recorded": RECORDED_BASELINE_US / fused_med,
+            "fused_batches": fused.fused_batches,
+            "ingest_us_trend": [
+                {
+                    "batch": i,
+                    "baseline_us": bu,
+                    "fused_us": fu,
+                    "replanned": base.reports[i].replanned,
+                }
+                for i, (bu, fu) in enumerate(zip(base_us, fused_us))
+            ],
+            "overlap_profile": profile,
+            "total_count": base.total_count,
             "replan_reasons": [
-                r.drift_reason for r in eng.reports if r.replanned and r.batch > 0
+                r.drift_reason for r in base.reports if r.replanned and r.batch > 0
             ],
         }
         path = pathlib.Path(out_json)

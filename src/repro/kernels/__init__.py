@@ -2,6 +2,8 @@
 
   * ``histogram`` — heavy-hitter detection (one-hot block counting)
   * ``cms_update`` — streaming Count-Min sketch increment (HH tracking)
+  * ``fused_ingest`` — fused streaming ingest: map-keys + sketch + pack
+    plan in one double-buffered pass (DESIGN.md §7)
   * ``reducer_join`` / ``flat_join`` — reduce-phase block equi-join
   * ``flash_attention`` — LM prefill attention (online softmax, GQA)
 
@@ -9,6 +11,20 @@ Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU via interpret mode against the pure-jnp oracles in
 ``ref.py``.
 """
-from .ops import cms_update, flash_attention, flat_join, histogram, reducer_join
+from .ops import (
+    cms_update,
+    flash_attention,
+    flat_join,
+    fused_ingest,
+    histogram,
+    reducer_join,
+)
 
-__all__ = ["cms_update", "flash_attention", "flat_join", "histogram", "reducer_join"]
+__all__ = [
+    "cms_update",
+    "flash_attention",
+    "flat_join",
+    "fused_ingest",
+    "histogram",
+    "reducer_join",
+]

@@ -1,6 +1,8 @@
-"""Pallas TPU kernel: reduce-phase block equi-join (count + checksum).
+"""Pallas TPU kernel: reduce-phase block equi-join (count + checksum)
+(DESIGN.md §2; jnp oracles: ``kernels.ref.block_join_ref`` and
+``kernels.ref.tiled_join_ref``).
 
-The per-reducer join of the SharesSkew reduce phase (DESIGN.md §2): instead
+The per-reducer join of the SharesSkew reduce phase: instead
 of a hash table (random access is hostile to VMEM/VPU), each reducer's R and
 S bins are compared block-against-block — a dense [cap_r, cap_s] equality
 matrix per reducer, reduced to a match count and an orderless weighted

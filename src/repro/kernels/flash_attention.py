@@ -1,5 +1,6 @@
 """Pallas TPU kernel: FlashAttention forward (causal, GQA) — the LM
-compute hotspot for prefill/scoring.
+compute hotspot for prefill/scoring (model context: DESIGN.md
+§Arch-applicability; jnp oracle: ``kernels.ref.attention_ref``).
 
 Online-softmax over KV blocks (Dao et al. '22 adapted to TPU): grid is
 (batch*heads, q_blocks, kv_blocks) with the kv dimension innermost and

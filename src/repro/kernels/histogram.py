@@ -1,6 +1,7 @@
-"""Pallas TPU kernel: histogram / bincount for heavy-hitter detection.
+"""Pallas TPU kernel: histogram / bincount for heavy-hitter detection
+(DESIGN.md §2; jnp oracle: ``kernels.ref.histogram_ref``).
 
-TPU adaptation (DESIGN.md §2): scatter-add bincount serializes on TPU, so
+TPU adaptation: scatter-add bincount serializes on TPU, so
 we count via a block-wise one-hot comparison
 ``(values[:, None] == iota[None, :]).sum(0)`` — a VPU-friendly dense
 reduction whose accumulator lives in VMEM across grid steps.  Negative

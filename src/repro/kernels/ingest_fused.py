@@ -1,0 +1,373 @@
+"""Pallas TPU kernel: fused streaming-ingest pass (DESIGN.md §7; jnp oracle:
+``kernels.ref.fused_ingest_ref``).
+
+The streaming engine's ingest hot path runs three per-tuple stages that each
+traverse the same micro-batch: map-phase destination ids
+(``mapreduce.keys.map_phase``), decaying Count-Min sketch increments
+(``kernels.sketch_update``), and per-destination send-buffer packing
+(``stream.engine``).  This kernel fuses all three into ONE pass over the
+tuple blocks:
+
+  * **destinations** — the static route table of ``mapreduce.keys``
+    (hash/pin/exclude/replicate per residual) evaluated in-kernel with the
+    same mix32 family, emitting ``dest [N, W]`` global reducer ids
+    (−1 = not emitted);
+  * **sketch** — the [n_cols·depth, width] Count-Min increment accumulated
+    in a VMEM-resident table across grid steps (the one-hot block-counting
+    pattern of ``kernels.histogram``: scatter-add serializes on TPU,
+    DESIGN.md §2); the host applies decay and absorbs the increment;
+  * **pack plan** — per-reducer arrival ``counts [K]`` plus each emission's
+    ``rank [N, W]`` within its destination (flat emission order, matching a
+    stable sort by destination bit-for-bit).  ``bins[dest, base + rank]``
+    is then a pure precomputed-index scatter: the send buffers pack with no
+    sort, no searchsorted, and no data-dependent control flow.
+
+Input streaming: rows are consumed block-by-block from HBM with
+double-buffered ``make_async_copy`` DMA into VMEM scratch, so the next
+block's DMA overlaps the current block's VPU compute (DESIGN.md §7 gives
+the roofline; ``overlap_profile`` models it).  ``double_buffer=False``
+falls back to the automatic grid pipeline, which performs the same
+double-buffering implicitly.  Both variants run under interpret mode on
+CPU, which is what CI exercises against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ONE definition of the hash family keeps host routing/sketching and the
+# fused device pass in sync bit-for-bit
+from repro.mapreduce.hashing import mix32_jnp as _mix32
+
+# Route table entry (all-static, hashable — a jit static argument):
+#   (offset, hashed, replica_offsets, pins, excludes)
+#   hashed:  ((col, seed, dim, stride), ...)   attrs the tuple owns
+#   replica_offsets: (int, ...)                flat grid offsets (the paper's
+#                                              recursive_keys enumeration)
+#   pins:    ((col, value), ...)               HH equality constraints
+#   excludes:((col, (value, ...)), ...)        ordinary-type HH exclusions
+RouteTable = tuple
+
+
+def route_width(routes: RouteTable) -> int:
+    """Total emission width W = sum of per-residual replication."""
+    return sum(len(rep) for _, _, rep, _, _ in routes)
+
+
+def _dest_block(rows, msk, routes: RouteTable):
+    """[B, W] destination ids for one tuple block (−1 = not emitted).
+
+    Mirrors ``mapreduce.keys.RouteSpec.destinations`` exactly, column
+    layout included (residual-major, replica-minor).
+    """
+    n = rows.shape[0]
+    blocks = []
+    for offset, hashed, rep, pins, excludes in routes:
+        base = jnp.full((n,), offset, jnp.int32)
+        for col, seed, dim, stride in hashed:
+            bucket = (_mix32(rows[:, col], seed) % jnp.uint32(dim)).astype(
+                jnp.int32
+            )
+            base = base + bucket * jnp.int32(stride)
+        ok = msk
+        for col, value in pins:
+            ok = ok & (rows[:, col] == value)
+        for col, values in excludes:
+            v = rows[:, col]
+            bad = jnp.zeros((n,), bool)
+            for hv in values:
+                bad = bad | (v == hv)
+            ok = ok & ~bad
+        for r_off in rep:
+            blocks.append(jnp.where(ok, base + jnp.int32(r_off), jnp.int32(-1)))
+    return jnp.stack(blocks, axis=1)
+
+
+def _cms_block(rows, msk, sketch_cols, seeds, width):
+    """[n_cols*depth, width] Count-Min increment for one tuple block."""
+    n = rows.shape[0]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (n, width), 1)
+    out = []
+    for col in sketch_cols:
+        vals = rows[:, col]
+        for seed in seeds:
+            bucket = (_mix32(vals, seed) % jnp.uint32(width)).astype(jnp.int32)
+            onehot = (bucket[:, None] == bins) & msk[:, None]
+            out.append(onehot.astype(jnp.int32).sum(axis=0))
+    return jnp.stack(out)
+
+
+def _rank_counts_block(dest, prev_counts, k_pad):
+    """(rank [B, W], counts_delta [k_pad]) for one block.
+
+    rank = arrivals at this destination before this emission (earlier
+    blocks via ``prev_counts``, earlier flat positions in this block via a
+    dense order comparison — no sort, no scatter, VPU-only).
+    """
+    b, w = dest.shape
+    kiota = jax.lax.broadcasted_iota(jnp.int32, (b, w, k_pad), 2)
+    onehot = dest[:, :, None] == kiota  # invalid (−1) matches nothing
+    base = jnp.where(onehot, prev_counts[None, None, :], 0).sum(axis=2)
+    flat = (
+        jax.lax.broadcasted_iota(jnp.int32, (b, w), 0) * w
+        + jax.lax.broadcasted_iota(jnp.int32, (b, w), 1)
+    )
+    eq = dest[:, :, None, None] == dest[None, None, :, :]
+    earlier = flat[None, None, :, :] < flat[:, :, None, None]
+    rank_in_block = (eq & earlier).astype(jnp.int32).sum(axis=(2, 3))
+    rank = jnp.where(dest >= 0, base + rank_in_block, -1)
+    return rank, onehot.astype(jnp.int32).sum(axis=(0, 1))
+
+
+def _unpack_refs(out_refs, *, with_route, with_sketch):
+    refs = list(out_refs)
+    dest_ref = rank_ref = counts_ref = cms_ref = None
+    if with_route:
+        dest_ref, rank_ref, counts_ref = refs[:3]
+        refs = refs[3:]
+    if with_sketch:
+        (cms_ref,) = refs
+    return dest_ref, rank_ref, counts_ref, cms_ref
+
+
+def _fused_grid_kernel(
+    rows_ref, *out_refs, routes, sketch_cols, seeds, width, k_pad
+):
+    """Grid-pipelined variant: one step per tuple block; counts and the
+    sketch table are revisited every step and accumulate in VMEM."""
+    dest_ref, rank_ref, counts_ref, cms_ref = _unpack_refs(
+        out_refs, with_route=bool(routes), with_sketch=bool(sketch_cols)
+    )
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        if counts_ref is not None:
+            counts_ref[...] = jnp.zeros_like(counts_ref)
+        if cms_ref is not None:
+            cms_ref[...] = jnp.zeros_like(cms_ref)
+
+    blk = rows_ref[...]  # [B, arity+1]; last column is the validity mask
+    rows, msk = blk[:, :-1], blk[:, -1] != 0
+    if cms_ref is not None:
+        cms_ref[...] += _cms_block(rows, msk, sketch_cols, seeds, width)
+    if dest_ref is not None:
+        dest = _dest_block(rows, msk, routes)
+        rank, delta = _rank_counts_block(dest, counts_ref[...], k_pad)
+        dest_ref[...] = dest
+        rank_ref[...] = rank
+        counts_ref[...] += delta
+
+
+def _fused_dma_kernel(
+    rows_hbm, *out_refs, routes, sketch_cols, seeds, width, k_pad, block, nsteps
+):
+    """Double-buffered variant: rows stay in HBM; two VMEM slots are filled
+    by async DMA so the copy of block i+1 overlaps the compute on block i
+    (DESIGN.md §7)."""
+    dest_ref, rank_ref, counts_ref, cms_ref = _unpack_refs(
+        out_refs, with_route=bool(routes), with_sketch=bool(sketch_cols)
+    )
+    if counts_ref is not None:
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+    if cms_ref is not None:
+        cms_ref[...] = jnp.zeros_like(cms_ref)
+
+    def body(scratch, sem):
+        def get_dma(slot, i):
+            return pltpu.make_async_copy(
+                rows_hbm.at[pl.ds(i * block, block), :],
+                scratch.at[slot],
+                sem.at[slot],
+            )
+
+        get_dma(0, 0).start()
+
+        def step(i, _):
+            cur, nxt = i % 2, (i + 1) % 2
+
+            @pl.when(i + 1 < nsteps)
+            def _prefetch():
+                get_dma(nxt, i + 1).start()
+
+            get_dma(cur, i).wait()
+            blk = scratch[cur]
+            rows, msk = blk[:, :-1], blk[:, -1] != 0
+            if cms_ref is not None:
+                cms_ref[...] += _cms_block(rows, msk, sketch_cols, seeds, width)
+            if dest_ref is not None:
+                dest = _dest_block(rows, msk, routes)
+                rank, delta = _rank_counts_block(dest, counts_ref[...], k_pad)
+                dest_ref[pl.ds(i * block, block), :] = dest
+                rank_ref[pl.ds(i * block, block), :] = rank
+                counts_ref[...] += delta
+            return _
+
+        jax.lax.fori_loop(0, nsteps, step, None)
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((2, block, rows_hbm.shape[1]), jnp.int32),
+        sem=pltpu.SemaphoreType.DMA((2,)),
+    )
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def fused_ingest_pallas(
+    rows: jnp.ndarray,  # [N, arity] int32
+    routes: RouteTable = (),
+    sketch_cols: tuple[int, ...] = (),
+    seeds: tuple[int, ...] = (),
+    width: int = 2048,
+    num_reducers: int = 1,
+    block: int = 256,
+    interpret: bool | None = None,
+    double_buffer: bool = True,
+):
+    """One fused pass over a micro-batch for one relation.
+
+    Returns ``(dest [N, W], rank [N, W], counts [num_reducers],
+    cms [n_cols, depth, width])``; the route outputs are None when
+    ``routes`` is empty (sketch-only pass), ``cms`` is None when
+    ``sketch_cols`` is empty (route-only pass).
+    """
+    if not routes and not sketch_cols:
+        raise ValueError("fused ingest needs routes and/or sketch_cols")
+    if sketch_cols and not seeds:
+        raise ValueError("sketching requires the Count-Min row seeds")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n, arity = rows.shape
+    w = route_width(routes)
+    depth = len(seeds)
+    n_cols = len(sketch_cols)
+
+    # block size: keep the dense order-comparison window (block*W)^2 at
+    # ~VMEM scale regardless of the plan's replication width
+    if w:
+        while block > 8 and block * w > 1024:
+            block //= 2
+    n_pad = max(_round_up(n, block), block)
+    k_pad = max(_round_up(num_reducers, 128), 128)
+
+    mask = jnp.ones((n,), jnp.int32)
+    rows_aug = jnp.concatenate([rows.astype(jnp.int32), mask[:, None]], axis=1)
+    if n_pad != n:
+        rows_aug = jnp.concatenate(
+            [rows_aug, jnp.zeros((n_pad - n, arity + 1), jnp.int32)]
+        )
+    nsteps = n_pad // block
+
+    out_shapes, out_specs = [], []
+    if routes:
+        out_shapes += [
+            jax.ShapeDtypeStruct((n_pad, w), jnp.int32),  # dest
+            jax.ShapeDtypeStruct((n_pad, w), jnp.int32),  # rank
+            jax.ShapeDtypeStruct((k_pad,), jnp.int32),  # counts
+        ]
+        out_specs += [
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+            pl.BlockSpec((k_pad,), lambda i: (0,)),
+        ]
+    if sketch_cols:
+        out_shapes.append(jax.ShapeDtypeStruct((n_cols * depth, width), jnp.int32))
+        out_specs.append(pl.BlockSpec((n_cols * depth, width), lambda i: (0, 0)))
+
+    common = dict(
+        routes=routes, sketch_cols=sketch_cols, seeds=tuple(seeds),
+        width=width, k_pad=k_pad,
+    )
+    if double_buffer:
+        outs = pl.pallas_call(
+            functools.partial(
+                _fused_dma_kernel, block=block, nsteps=nsteps, **common
+            ),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=tuple(
+                pl.BlockSpec(memory_space=pltpu.VMEM) for _ in out_shapes
+            ),
+            out_shape=tuple(out_shapes),
+            interpret=interpret,
+        )(rows_aug)
+    else:
+        outs = pl.pallas_call(
+            functools.partial(_fused_grid_kernel, **common),
+            grid=(nsteps,),
+            in_specs=[pl.BlockSpec((block, arity + 1), lambda i: (i, 0))],
+            out_specs=tuple(out_specs),
+            out_shape=tuple(out_shapes),
+            interpret=interpret,
+        )(rows_aug)
+
+    outs = list(outs)
+    dest = rank = counts = cms = None
+    if routes:
+        dest = outs[0][:n]
+        rank = outs[1][:n]
+        counts = outs[2][:num_reducers]
+        outs = outs[3:]
+    if sketch_cols:
+        cms = outs[-1].reshape(n_cols, depth, width)
+    return dest, rank, counts, cms
+
+
+# ---- roofline / overlap model (DESIGN.md §7) -------------------------------
+# Per-chip numbers for a TPU v5e-class part; the model is about orders of
+# magnitude, not decimal places.
+HBM_BYTES_PER_S = 819e9  # ~819 GB/s HBM bandwidth
+VPU_INT_OPS_PER_S = 3.0e12  # 8x128 VPU lanes, ~1 op/lane/cycle @ ~940MHz x ~4
+
+def overlap_profile(
+    n_rows: int,
+    arity: int,
+    route_w: int,
+    num_reducers: int,
+    n_sketch_cols: int,
+    depth: int,
+    width: int,
+    block: int = 256,
+) -> dict:
+    """Model the fused pass against the hardware roofline.
+
+    Returns modeled HBM traffic, VPU work, the serial vs double-buffered
+    time, and which side of the roofline binds.  ``bench_stream`` writes
+    this next to the measured wall times so the gap between "what the
+    kernel does" and "what the host pays" stays visible.
+    """
+    if route_w:
+        while block > 8 and block * route_w > 1024:
+            block //= 2
+    bytes_in = n_rows * (arity + 1) * 4
+    bytes_out = (2 * n_rows * route_w + num_reducers + n_sketch_cols * depth * width) * 4
+    dma_s = (bytes_in + bytes_out) / HBM_BYTES_PER_S
+
+    e = block * route_w  # flat emissions per block
+    nsteps = max(1, -(-n_rows // block)) if block else 1
+    k_pad = max(_round_up(num_reducers, 128), 128)
+    ops_rank = nsteps * (3 * e * e + 3 * e * k_pad)  # order compare + one-hot
+    ops_dest = n_rows * route_w * 8  # mix32 + pin/exclude masks
+    ops_cms = n_rows * n_sketch_cols * depth * (width * 2 + 8)
+    vpu_ops = ops_rank + ops_dest + ops_cms
+    compute_s = vpu_ops / VPU_INT_OPS_PER_S
+
+    serial_s = dma_s + compute_s
+    overlapped_s = max(dma_s, compute_s)
+    return {
+        "bytes_in": bytes_in,
+        "bytes_out": bytes_out,
+        "vpu_ops": vpu_ops,
+        "dma_us": dma_s * 1e6,
+        "compute_us": compute_s * 1e6,
+        "serial_us": serial_s * 1e6,
+        "overlapped_us": overlapped_s * 1e6,
+        "overlap_speedup": serial_s / overlapped_s if overlapped_s else 1.0,
+        "bound": "compute" if compute_s >= dma_s else "memory",
+    }

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from .block_join import block_join_pallas, tiled_join_pallas
 from .flash_attention import flash_attention_pallas
 from .histogram import histogram_pallas
+from .ingest_fused import fused_ingest_pallas
 from .sketch_update import cms_update_pallas
 
 
@@ -29,6 +30,39 @@ def cms_update(
 ) -> jnp.ndarray:
     """[depth, width] Count-Min table increment for one batch of int32 keys."""
     return cms_update_pallas(values, seeds, width, block=block)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "routes", "sketch_cols", "seeds", "width", "num_reducers",
+        "block", "double_buffer",
+    ),
+)
+def fused_ingest(
+    rows: jnp.ndarray,
+    *,
+    routes: tuple = (),
+    sketch_cols: tuple[int, ...] = (),
+    seeds: tuple[int, ...] = (),
+    width: int = 2048,
+    num_reducers: int = 1,
+    block: int = 256,
+    double_buffer: bool = True,
+):
+    """Fused streaming-ingest pass (DESIGN.md §7): one traversal computing
+    map-phase destinations, the Count-Min increment, and the pack plan
+    (per-reducer counts + in-destination ranks)."""
+    return fused_ingest_pallas(
+        rows,
+        routes=routes,
+        sketch_cols=sketch_cols,
+        seeds=seeds,
+        width=width,
+        num_reducers=num_reducers,
+        block=block,
+        double_buffer=double_buffer,
+    )
 
 
 @jax.jit

@@ -1,9 +1,22 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+One oracle per kernel module:
+
+  * ``histogram_ref``     — ``kernels.histogram``
+  * ``cms_update_ref``    — ``kernels.sketch_update``
+  * ``fused_ingest_ref``  — ``kernels.ingest_fused``
+  * ``block_join_ref`` / ``tiled_join_ref`` — ``kernels.block_join``
+  * ``attention_ref``     — ``kernels.flash_attention``
+  * ``wkv6_ref``          — ``kernels.wkv6`` (defined beside its kernel for
+    its scan-lowering notes; re-exported here so every oracle has one home)
+"""
 from __future__ import annotations
 
 import math
 
 import jax.numpy as jnp
+
+from .wkv6 import wkv6_ref  # noqa: F401  (re-export, see module docstring)
 
 
 def histogram_ref(values: jnp.ndarray, num_bins: int) -> jnp.ndarray:
@@ -31,6 +44,64 @@ def cms_update_ref(
         bucket = (x % jnp.uint32(width)).astype(jnp.int32)
         out.append(histogram_ref(bucket, width))
     return jnp.stack(out)
+
+
+def fused_ingest_ref(
+    rows: jnp.ndarray,  # [N, arity] int32
+    routes: tuple = (),
+    sketch_cols: tuple[int, ...] = (),
+    seeds: tuple[int, ...] = (),
+    width: int = 2048,
+    num_reducers: int = 1,
+):
+    """Oracle for ``kernels.ingest_fused``: (dest, rank, counts, cms).
+
+    dest mirrors ``mapreduce.keys.map_phase``; rank is the stable-sort
+    rank of each valid emission within its destination (flat emission
+    order); counts is the per-reducer arrival histogram; cms stacks
+    ``cms_update_ref`` over the sketched columns.
+    """
+    n = rows.shape[0]
+    rows = rows.astype(jnp.int32)
+    dest = rank = counts = cms = None
+    if routes:
+        blocks = []
+        for offset, hashed, rep, pins, excludes in routes:
+            base = jnp.full((n,), offset, jnp.int32)
+            for col, seed, dim, stride in hashed:
+                x = rows[:, col].astype(jnp.uint32) ^ jnp.uint32(seed)
+                x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+                x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+                x = x ^ (x >> 16)
+                base = base + (x % jnp.uint32(dim)).astype(jnp.int32) * jnp.int32(
+                    stride
+                )
+            ok = jnp.ones((n,), bool)
+            for col, value in pins:
+                ok &= rows[:, col] == value
+            for col, values in excludes:
+                bad = jnp.zeros((n,), bool)
+                for hv in values:
+                    bad |= rows[:, col] == hv
+                ok &= ~bad
+            for r_off in rep:
+                blocks.append(
+                    jnp.where(ok, base + jnp.int32(r_off), jnp.int32(-1))
+                )
+        dest = jnp.stack(blocks, axis=1) if blocks else jnp.zeros((n, 0), jnp.int32)
+        flat = dest.reshape(-1)
+        order = jnp.argsort(flat, stable=True)
+        fs = flat[order]
+        first = jnp.searchsorted(fs, fs, side="left")
+        rk = jnp.arange(fs.size, dtype=jnp.int32) - first.astype(jnp.int32)
+        rank_flat = jnp.zeros_like(flat).at[order].set(rk)
+        rank = jnp.where(dest >= 0, rank_flat.reshape(dest.shape), -1)
+        counts = histogram_ref(flat, num_reducers)
+    if sketch_cols:
+        cms = jnp.stack(
+            [cms_update_ref(rows[:, c], tuple(seeds), width) for c in sketch_cols]
+        )
+    return dest, rank, counts, cms
 
 
 def block_join_ref(

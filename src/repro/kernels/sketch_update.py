@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: incremental Count-Min sketch update (DESIGN.md §6).
+"""Pallas TPU kernel: incremental Count-Min sketch update (DESIGN.md §6;
+jnp oracle: ``kernels.ref.cms_update_ref``).
 
 The streaming engine tracks heavy-hitter candidates across micro-batches
 with decaying Count-Min sketches (``repro.stream.sketch``).  The per-batch

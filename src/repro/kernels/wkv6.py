@@ -6,7 +6,11 @@ registers/shared memory and walks time sequentially): the grid is
 [hd, hd] state lives in a VMEM scratch across chunks, so HBM traffic is
 just the r/k/v/w inputs and y outputs (+ the state once per *sequence*,
 not once per token).  This removes the state round-trip that dominates the
-XLA-scan lowering's memory roofline (EXPERIMENTS.md §Perf, rwkv6 cell).
+XLA-scan lowering's memory roofline (``benchmarks.roofline`` artifacts for
+the rwkv6 family; model-level context in DESIGN.md §Arch-applicability).
+
+jnp oracle: ``wkv6_ref`` below, re-exported through ``kernels.ref`` with
+the other kernel oracles.
 
     y_t = r_t · (S + u ∘ (k_t ⊗ v_t));   S <- diag(w_t) S + k_t ⊗ v_t
 """

@@ -144,3 +144,17 @@ def map_phase(
     specs = build_route_specs(plan, rel)
     blocks = [s.destinations(rows) for s in specs]
     return jnp.concatenate(blocks, axis=1)
+
+
+def static_route_table(
+    plan: SharesSkewPlan, rel: RelationSchema
+) -> tuple[tuple, ...]:
+    """The plan's routing recipes for one relation as an all-static,
+    hashable tuple — the jit-static form consumed by the fused ingest
+    kernel (``kernels.ingest_fused``), whose destination math must match
+    ``map_phase`` bit-for-bit, column layout included."""
+    out = []
+    for s in build_route_specs(plan, rel):
+        rep = tuple(int(x) for x in s.replica_offsets().tolist())
+        out.append((s.offset, s.hashed, rep, s.pins, s.ordinary_excludes))
+    return tuple(out)

@@ -15,6 +15,7 @@ against the host oracle.  A capacity-bounded materialization is provided for
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -153,6 +154,21 @@ def local_join_count_checksum(
         *[w.astype(jnp.int32) for w in w_ops],
     )
     return jnp.sum(count), jnp.sum(checksum).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "weight_seed"))
+def local_join_count_checksum_jit(
+    spec: LocalJoinSpec,
+    bins: dict[str, jnp.ndarray],
+    valids: dict[str, jnp.ndarray],
+    weight_seed: int = 0x5EED,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Jit-cached ``local_join_count_checksum`` (``spec`` is hashable and
+    static).  Same integer math, so results are bit-identical; the eager
+    version stays as the oracle while this one serves latency-critical
+    callers (the streaming fused-ingest path, DESIGN.md §7) where per-call
+    op-by-op dispatch would dominate the batch budget."""
+    return local_join_count_checksum(spec, bins, valids, weight_seed)
 
 
 def materialize_two_way(

@@ -19,7 +19,7 @@ Params = dict
 
 # When seq-len exceeds this, attention switches to the chunked (flash-style,
 # scan-over-query-blocks) path so [L, L] score matrices never materialize.
-# Env-overridable: perf iterations sweep these (EXPERIMENTS.md §Perf).
+# Env-overridable so perf sweeps (benchmarks/) can vary them per run.
 ATTN_CHUNK_THRESHOLD = int(os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD", "2048"))
 ATTN_CHUNK = int(os.environ.get("REPRO_ATTN_CHUNK", "1024"))
 

@@ -156,7 +156,7 @@ def moe_ffn(
 
     # pad the expert dim so it tiles the "model" axis evenly (e.g. qwen2's
     # 60 experts -> 64): unpadded counts force XLA to all-gather the whole
-    # dispatch tensor around every slot-dim reshard (EXPERIMENTS.md §Perf)
+    # dispatch tensor around every slot-dim reshard
     e_pad = max(e, expert_pad, int(os.environ.get("REPRO_EXPERT_PAD", "0")))
 
     if extra_slots > 0:

@@ -1,9 +1,13 @@
 """Streaming SharesSkew: online micro-batch joins with drift-triggered
-replanning (DESIGN.md §6).
+replanning (DESIGN.md §6; fused ingest hot path: §7).
 
   * ``sketch``  — decaying Count-Min + SpaceSaving heavy-hitter tracking
   * ``drift``   — cost-model staleness checks for the running plan
-  * ``engine``  — stateful executor with carried reducer state
+  * ``engine``  — stateful executor with carried reducer state; with
+    ``StreamConfig(fused_ingest=True)`` the per-batch hot path runs
+    through the ``kernels.ingest_fused`` Pallas pass
+  * ``delta``   — sorted merge-join evaluation of the incremental-join
+    terms for binary single-column joins (the fused path's delta engine)
 """
 from .drift import DriftDecision, DriftMonitor, plan_comm_on_batch, predicted_loads
 from .engine import BatchReport, StreamConfig, StreamingJoinEngine

@@ -27,6 +27,13 @@ Per batch:
 ``recompute_distributed()`` replays the full accumulated input through
 ``mapreduce.shuffle.run_distributed`` under the current plan — the
 cross-check that carried state lost nothing.
+
+With ``StreamConfig(fused_ingest=True)`` (DESIGN.md §7) steps 1 and 3 run
+as ONE speculative pass per relation through ``kernels.ingest_fused``
+(destinations + sketch increment + pack plan), and step 4's terms use the
+sorted merge join of ``stream.delta`` for binary single-column queries.
+Every fused-path result is bit-identical to this baseline, which stays in
+the tree as the correctness oracle.
 """
 from __future__ import annotations
 
@@ -38,9 +45,14 @@ import numpy as np
 
 from repro.core.planner import SharesSkewPlan, plan_with_hh
 from repro.core.schema import JoinQuery
-from repro.mapreduce.keys import map_phase
-from repro.mapreduce.local_join import LocalJoinSpec, local_join_count_checksum
+from repro.mapreduce.keys import map_phase, static_route_table
+from repro.mapreduce.local_join import (
+    LocalJoinSpec,
+    local_join_count_checksum,
+    local_join_count_checksum_jit,
+)
 
+from .delta import SortedDeltaIndex
 from .drift import DriftDecision, DriftMonitor
 from .sketch import StreamHHTracker
 
@@ -64,6 +76,13 @@ class StreamConfig:
     cooldown: int = 1  # batches after a replan during which drift is ignored
     use_device_sketch: bool = False  # route CMS updates through the Pallas kernel
     sketch_seed: int = 0
+    # Fused ingest (DESIGN.md §7): one Pallas pass per relation computes
+    # map-phase destinations, the Count-Min increment, and the pack plan
+    # (per-reducer counts + in-destination ranks).  Bit-identical to the
+    # baseline path, which remains the correctness oracle.
+    fused_ingest: bool = False
+    fused_block: int = 256  # tuple block per grid step / DMA slot
+    fused_double_buffer: bool = True  # explicit DMA double buffering
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +127,22 @@ def _group_np(
 
 def _pow2(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class _Routed:
+    """One relation's routed batch: the valid emissions after map_phase.
+
+    ``rank`` (fused path only) is each emission's arrival index within its
+    destination — the kernel's pack plan, which turns every downstream
+    grouping into a precomputed-index scatter.  ``counts`` is the
+    per-reducer arrival histogram (= ``np.bincount(dest, minlength=k)``).
+    """
+
+    dest: np.ndarray  # [E] int32 reducer ids (valid only)
+    rows: np.ndarray  # [E, arity] int32
+    rank: np.ndarray | None  # [E] in-destination ranks, None on baseline
+    counts: np.ndarray  # [k] int64 arrivals per reducer
 
 
 class StreamingJoinEngine:
@@ -160,6 +195,29 @@ class StreamingJoinEngine:
         self.total_migrated = 0
         self.reports: list[BatchReport] = []
 
+        # fused-ingest bookkeeping: columns the kernel must sketch per
+        # relation (tracker attr order), and a loud counter so callers can
+        # verify the fused path actually ran (no silent fallback exists,
+        # but benchmarks assert on this to keep it that way)
+        self._sketch_cols: dict[str, tuple[tuple[str, int], ...]] = {
+            rel.name: tuple(
+                (a, rel.index_of(a))
+                for a in self.tracker.attrs
+                if a in rel.attrs
+            )
+            for rel in query.relations
+        }
+        self.fused_batches = 0
+        # merge-join delta index (DESIGN.md §7): exact sorted-key evaluation
+        # of the telescoping terms for binary single-column joins, replacing
+        # the dense einsum whose cost is padded to the hottest reducer bin.
+        # Bit-identical; the einsum stays the oracle (and the n-way path).
+        self._delta_index: SortedDeltaIndex | None = (
+            SortedDeltaIndex(self.spec)
+            if config.fused_ingest and SortedDeltaIndex.eligible(self.spec)
+            else None
+        )
+
     # ---- internals ---------------------------------------------------------
     def _threshold(self) -> float:
         t = self.config.hh_threshold
@@ -180,6 +238,89 @@ class StreamingJoinEngine:
         ).reshape(-1, arity)
         ok = flat_dest >= 0
         return flat_dest[ok].astype(np.int32), flat_rows[ok]
+
+    def _fused_pass(
+        self, rel, rows: np.ndarray, with_route: bool, with_sketch: bool
+    ) -> tuple[_Routed | None, dict[str, np.ndarray] | None]:
+        """One fused-kernel pass over ``rows`` (DESIGN.md §7).
+
+        Returns (routed emissions under the CURRENT plan if ``with_route``,
+        per-attr Count-Min table increments if ``with_sketch``)."""
+        from repro.kernels import fused_ingest
+
+        arity = rows.shape[1]
+        cols = self._sketch_cols[rel.name] if with_sketch else ()
+        seeds = self.tracker.seeds
+        width = self.config.sketch_width
+        k = self.plan.total_reducers if with_route else 1
+        routes = static_route_table(self.plan, rel) if with_route else ()
+
+        empty_routed = _Routed(
+            np.empty(0, np.int32),
+            np.empty((0, arity), np.int32),
+            np.empty(0, np.int32),
+            np.zeros(k, np.int64),
+        )
+        zero_deltas = {
+            a: np.zeros((len(seeds), width), np.float64) for a, _ in cols
+        }
+        if rows.shape[0] == 0 or (not routes and not cols):
+            return (empty_routed if with_route else None), (
+                zero_deltas if with_sketch else None
+            )
+
+        dest, rank, counts, cms = fused_ingest(
+            jnp.asarray(rows.astype(np.int32)),
+            routes=routes,
+            sketch_cols=tuple(c for _, c in cols),
+            seeds=seeds,
+            width=width,
+            num_reducers=k,
+            block=self.config.fused_block,
+            double_buffer=self.config.fused_double_buffer,
+        )
+        routed = None
+        if with_route:
+            dest, rank = np.asarray(dest), np.asarray(rank)
+            n, w = dest.shape
+            flat_dest = dest.reshape(-1)
+            flat_rank = rank.reshape(-1)
+            flat_rows = np.broadcast_to(
+                rows.astype(np.int32)[:, None, :], (n, w, arity)
+            ).reshape(-1, arity)
+            ok = flat_dest >= 0
+            routed = _Routed(
+                flat_dest[ok].astype(np.int32),
+                flat_rows[ok],
+                flat_rank[ok],
+                np.asarray(counts).astype(np.int64),
+            )
+        deltas = None
+        if with_sketch:
+            cms_np = np.asarray(cms) if cms is not None else None
+            deltas = {
+                a: cms_np[i].astype(np.float64)
+                for i, (a, _) in enumerate(cols)
+            }
+        return routed, deltas
+
+    def _route_any(self, rel, rows: np.ndarray) -> _Routed:
+        """Route one relation under the current plan — fused kernel or the
+        baseline ``map_phase`` path, per config."""
+        if self.config.fused_ingest:
+            # sketch mode stays ON even though the increments are discarded
+            # here: route-only calls (replan re-routes, migrations) then hit
+            # the same compiled kernel variant as the speculative per-batch
+            # pass, so the batch after a replan pays no recompile
+            routed, _ = self._fused_pass(
+                rel, rows, True, bool(self._sketch_cols[rel.name])
+            )
+            return routed
+        dest, emitted = self._route(rel, rows)
+        counts = np.bincount(
+            dest, minlength=self.plan.total_reducers
+        ).astype(np.int64)
+        return _Routed(dest, emitted, None, counts)
 
     def _empty_state(
         self, arity: int
@@ -221,6 +362,33 @@ class StreamingJoinEngine:
         valid[ds, rank] = True
         return bins, valid, new_occup
 
+    def _scatter_any(
+        self,
+        state: tuple[np.ndarray, np.ndarray, np.ndarray],
+        routed: _Routed,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Append a routed batch to a binned state.  With a fused-kernel
+        pack plan the slot is ``occupancy + rank`` directly (no sort); the
+        result is bit-identical to ``_scatter_into``."""
+        if routed.rank is None:
+            return self._scatter_into(state, routed.dest, routed.rows)
+        bins, valid, occup = state
+        if routed.dest.size == 0:
+            return state
+        new_occup = occup + routed.counts
+        cap = bins.shape[1]
+        cap_needed = int(new_occup.max())
+        if cap_needed > cap:
+            new_cap = _pow2(cap_needed)
+            bins = np.pad(bins, ((0, 0), (0, new_cap - cap), (0, 0)))
+            valid = np.pad(valid, ((0, 0), (0, new_cap - cap)))
+        else:
+            bins, valid = bins.copy(), valid.copy()
+        slots = routed.rank + occup[routed.dest]
+        bins[routed.dest, slots] = routed.rows
+        valid[routed.dest, slots] = True
+        return bins, valid, new_occup
+
     def _install(self, plan: SharesSkewPlan, batch: dict[str, np.ndarray]) -> int:
         """Switch to ``plan``; re-route accumulated history under it.
         Returns the number of migrated emissions."""
@@ -232,51 +400,92 @@ class StreamingJoinEngine:
         for rel in self.query.relations:
             state = self._empty_state(rel.arity)
             hist = self._history[rel.name]
+            routed = None
             if hist:
                 rows = np.concatenate(hist, axis=0)
-                dest, emitted = self._route(rel, rows)
-                state = self._scatter_into(state, dest, emitted)
-                migrated += int(dest.size)
-                if dest.size:
-                    self._loads += np.bincount(dest, minlength=plan.total_reducers)
+                routed = self._route_any(rel, rows)
+                state = self._scatter_any(state, routed)
+                migrated += int(routed.dest.size)
+                self._loads += routed.counts
             self._state[rel.name] = state
+            if self._delta_index is not None:
+                # re-key the merge-join index under the new plan's reducers
+                if routed is not None:
+                    self._delta_index.rebuild(rel.name, routed.dest, routed.rows)
+                else:
+                    self._delta_index.rebuild(
+                        rel.name,
+                        np.empty(0, np.int32),
+                        np.empty((0, rel.arity), np.int32),
+                    )
         self.total_migrated += migrated
         return migrated
 
-    def _delta_join(
-        self,
-        new_dest: dict[str, np.ndarray],
-        new_rows: dict[str, np.ndarray],
+    def _delta_join_sorted(
+        self, new_routed: dict[str, _Routed]
     ) -> tuple[int, int]:
+        """The telescoping terms via ``SortedDeltaIndex`` (binary joins on
+        one shared column, fused path).  Evaluating term i against the
+        index *after* relations < i appended their delta reproduces the
+        all/new/old variant structure of the einsum path exactly; binned
+        state is still maintained so replays and tests see one layout."""
+        idx = self._delta_index
+        names = self.spec.rel_names
+        d_count, d_checksum = 0, 0
+        for i, nm in enumerate(names):
+            routed = new_routed[nm]
+            if routed.dest.size:
+                cnt, chk = idx.probe(names[1 - i], nm, routed.dest, routed.rows)
+                d_count += cnt
+                d_checksum = (d_checksum + chk) & _MASK32
+            idx.append(nm, routed.dest, routed.rows)
+            self._state[nm] = self._scatter_any(self._state[nm], routed)
+        return d_count, d_checksum
+
+    def _delta_join(self, new_routed: dict[str, _Routed]) -> tuple[int, int]:
         """Telescoping incremental join of the new emissions against carried
         state, then fold the batch into the state.  Returns
         (delta_count, delta_checksum)."""
+        if self._delta_index is not None:
+            return self._delta_join_sorted(new_routed)
         k = self.plan.total_reducers
         variants: dict[str, dict[str, tuple[jnp.ndarray, jnp.ndarray]]] = {}
         merged: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         for rel in self.query.relations:
             nm = rel.name
-            nd, nrows = new_dest[nm], new_rows[nm]
-            ncap = _pow2(max(int(np.bincount(nd, minlength=k).max()) if nd.size else 0, 1))
-            nbins, nvalid = _group_np(nd, nrows, k, ncap)
+            routed = new_routed[nm]
+            nd, nrows = routed.dest, routed.rows
+            ncap = _pow2(max(int(routed.counts.max()) if nd.size else 0, 1))
+            if routed.rank is None:
+                nbins, nvalid = _group_np(nd, nrows, k, ncap)
+            else:  # fused pack plan: precomputed-index scatter, no sort
+                nbins = np.zeros((k, ncap, nrows.shape[1]), dtype=np.int32)
+                nvalid = np.zeros((k, ncap), dtype=bool)
+                nbins[nd, routed.rank] = nrows
+                nvalid[nd, routed.rank] = True
             obins, ovalid, _ = self._state[nm]
-            merged[nm] = self._scatter_into(self._state[nm], nd, nrows)
+            merged[nm] = self._scatter_any(self._state[nm], routed)
             variants[nm] = {
                 "old": (jnp.asarray(obins), jnp.asarray(ovalid)),
                 "new": (jnp.asarray(nbins), jnp.asarray(nvalid)),
                 "all": (jnp.asarray(merged[nm][0]), jnp.asarray(merged[nm][1])),
             }
 
+        join_fn = (
+            local_join_count_checksum_jit
+            if self.config.fused_ingest
+            else local_join_count_checksum
+        )
         names = [r.name for r in self.query.relations]
         d_count, d_checksum = 0, 0
         for i, nm_i in enumerate(names):
-            if new_dest[nm_i].size == 0:
+            if new_routed[nm_i].dest.size == 0:
                 continue  # ΔR_i empty -> term contributes nothing
             bins, valids = {}, {}
             for j, nm_j in enumerate(names):
                 key = "all" if j < i else ("new" if j == i else "old")
                 bins[nm_j], valids[nm_j] = variants[nm_j][key]
-            cnt, chk = local_join_count_checksum(self.spec, bins, valids)
+            cnt, chk = join_fn(self.spec, bins, valids)
             d_count += int(cnt)
             d_checksum = (d_checksum + int(np.uint32(chk))) & _MASK32
         self._state.update(merged)
@@ -289,7 +498,26 @@ class StreamingJoinEngine:
             r.name: np.asarray(batch[r.name]).reshape(-1, r.arity)
             for r in self.query.relations
         }
-        self.tracker.observe(batch)
+        # speculative routing under the plan that was live when the batch
+        # arrived; discarded (and redone) only if this batch triggers a
+        # replan, so the common case is ONE fused pass per relation
+        spec_routes: dict[str, _Routed] = {}
+        if self.config.fused_ingest:
+            deltas: dict[tuple[str, str], np.ndarray] = {}
+            has_plan = self.plan is not None
+            for rel in self.query.relations:
+                routed, d = self._fused_pass(
+                    rel, batch[rel.name], with_route=has_plan, with_sketch=True
+                )
+                if d is not None:
+                    for a, tbl in d.items():
+                        deltas[(a, rel.name)] = tbl
+                if routed is not None:
+                    spec_routes[rel.name] = routed
+            self.tracker.observe_absorbed(batch, deltas)
+            self.fused_batches += 1
+        else:
+            self.tracker.observe(batch)
         snapshot = self.tracker.snapshot(
             self._threshold(), self.config.max_hh_per_attr
         )
@@ -321,17 +549,20 @@ class StreamingJoinEngine:
                     f"[stream] replan epoch={self.plan_epoch} ({reason}); "
                     f"migrated {migrated} emissions"
                 )
+        if replanned:
+            spec_routes = {}  # routed under the stale plan; redo below
 
         # route the new batch under the (possibly fresh) plan
-        new_dest, new_rows, comm = {}, {}, {}
+        new_routed, comm = {}, {}
         for rel in self.query.relations:
-            d, r = self._route(rel, batch[rel.name])
-            new_dest[rel.name], new_rows[rel.name] = d, r
-            comm[rel.name] = int(d.size)
-            if d.size:
-                self._loads += np.bincount(d, minlength=self.plan.total_reducers)
+            routed = spec_routes.get(rel.name)
+            if routed is None:
+                routed = self._route_any(rel, batch[rel.name])
+            new_routed[rel.name] = routed
+            comm[rel.name] = int(routed.dest.size)
+            self._loads += routed.counts
 
-        d_count, d_checksum = self._delta_join(new_dest, new_rows)
+        d_count, d_checksum = self._delta_join(new_routed)
         self.total_count += d_count
         self.total_checksum = (self.total_checksum + d_checksum) & _MASK32
         self.cumulative_comm += sum(comm.values())

@@ -194,6 +194,8 @@ class StreamHHTracker:
         self.query = query
         self.attrs = share_attributes(query)
         self.decay = float(decay)
+        self.width = int(width)
+        self.seeds = _row_seeds(seed, depth)  # shared by every CMS below
         self.use_device_sketch = bool(use_device_sketch)
         self._ss = {a: SpaceSaving(capacity) for a in self.attrs}
         self._cms: dict[tuple[str, str], DecayingCountMin] = {}
@@ -226,6 +228,34 @@ class StreamHHTracker:
                     cms.absorb(delta.astype(np.float64), col.size)
                 else:
                     cms.update(col)
+                self._ss[a].update(col)
+        self.batches += 1
+
+    def observe_absorbed(
+        self,
+        batch: dict[str, np.ndarray],
+        deltas: dict[tuple[str, str], np.ndarray],
+    ) -> None:
+        """``observe`` with the Count-Min increments precomputed elsewhere.
+
+        ``deltas[(attr, rel_name)]`` is the [depth, width] bucket-count
+        increment for that column — e.g. from the fused ingest kernel
+        (``kernels.ingest_fused``), which shares this tracker's ``seeds``
+        so tables stay bit-identical to the host ``observe`` path
+        (integer counts are exact in float64).  SpaceSaving candidate
+        tracking still runs host-side: it is a tiny dict update and needs
+        the raw values, which the sketch buckets discard.
+        """
+        for cms in self._cms.values():
+            cms.step()
+        for a in self.attrs:
+            self._ss[a].decay(self.decay)
+        for a in self.attrs:
+            for rel in self.query.relations_of(a):
+                col = np.asarray(batch[rel.name])[:, rel.index_of(a)]
+                self._cms[(a, rel.name)].absorb(
+                    np.asarray(deltas[(a, rel.name)], dtype=np.float64), col.size
+                )
                 self._ss[a].update(col)
         self.batches += 1
 
