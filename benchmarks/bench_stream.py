@@ -17,7 +17,12 @@ Tracked:
   * per-batch ingest wall time for both paths, the fused speedup (hard
     gate: fused median must be >= 10x faster than the 852 ms baseline
     median recorded at PR 5), and the modeled DMA/compute overlap profile
-    of the fused kernel.
+    of the fused kernel;
+  * bounded state (DESIGN.md §8): a third engine runs the same batches
+    under windowed retention + admission accounting — peak carried state
+    must drop below the unbounded engine's, the window fingerprint must
+    equal the oracle on the retained suffix, and the retention/shed
+    counters land in the ``bounded`` sub-record.
 
 ``BENCH_stream.json`` (all fields documented in BENCHMARKS.md) records the
 trajectory run over run.  The fused engine counts its kernel passes; this
@@ -36,7 +41,12 @@ from repro.core import plan_shares_skew, two_way
 from repro.kernels.ingest_fused import overlap_profile, route_width
 from repro.mapreduce import oracle_join, predicted_comm
 from repro.mapreduce.keys import static_route_table
-from repro.stream import StreamConfig, StreamingJoinEngine
+from repro.stream import (
+    AdmissionPolicy,
+    RetentionPolicy,
+    StreamConfig,
+    StreamingJoinEngine,
+)
 
 from .common import emit
 
@@ -118,6 +128,28 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
         f"{RECORDED_BASELINE_US / 1e3:.0f} ms baseline"
     )
 
+    # ---- bounded state (DESIGN.md §8) --------------------------------------
+    # same batches under windowed retention + admission: carried state must
+    # flatten (vs the unbounded engine's monotonic growth) and the window
+    # fingerprint must stay exact on the retained suffix
+    bounded, _ = run(
+        StreamConfig(
+            q=120, decay=0.5, load_factor=2.0, fused_ingest=True,
+            retention=RetentionPolicy(window_batches=3),
+            admission=AdmissionPolicy(headroom=50.0),  # accounting on, no throttle
+        )
+    )
+    w_count, w_checksum, _, _ = oracle_join(query, bounded.history_data())
+    assert (bounded.window_count, bounded.window_checksum) == (
+        w_count, w_checksum,
+    ), "bounded engine window fingerprint != oracle on retained suffix"
+    assert bounded.expired_batches == n_batches - 3
+    peak_carried_bounded = max(r.carried_tuples for r in bounded.reports)
+    peak_carried_unbounded = max(r.carried_tuples for r in base.reports)
+    assert peak_carried_bounded < peak_carried_unbounded, (
+        "retention failed to bound carried state"
+    )
+
     # modeled roofline of the fused pass under the final plan (R relation)
     rel = query.relations[0]
     profile = overlap_profile(
@@ -140,6 +172,13 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
     emit("stream_fused_ingest_wall", fused_med,
          f"speedup={speedup:.1f}x;vs_recorded="
          f"{RECORDED_BASELINE_US / fused_med:.1f}x")
+    emit("stream_bounded_peak_carried", peak_carried_bounded,
+         f"unbounded={peak_carried_unbounded};"
+         f"window={bounded.config.retention.window_batches};"
+         f"expired={bounded.expired_batches}")
+    emit("stream_bounded_shed", bounded.total_shed,
+         f"deferred={bounded.total_deferred};"
+         f"retracted={bounded.total_retracted}")
     for i, (bu, fu) in enumerate(zip(base_us, fused_us)):
         replanned = base.reports[i].replanned
         print(f"# batch {i}: baseline {bu / 1e3:8.1f} ms  "
@@ -175,6 +214,22 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
                 for i, (bu, fu) in enumerate(zip(base_us, fused_us))
             ],
             "overlap_profile": profile,
+            "bounded": {
+                "window_batches": bounded.config.retention.window_batches,
+                "admission_headroom": bounded.config.admission.headroom,
+                "peak_carried_tuples": peak_carried_bounded,
+                "peak_carried_tuples_unbounded": peak_carried_unbounded,
+                "final_carried_tuples": bounded.reports[-1].carried_tuples,
+                "max_carried_per_reducer": max(
+                    r.max_carried for r in bounded.reports
+                ),
+                "expired_batches": bounded.expired_batches,
+                "retracted_results": bounded.total_retracted,
+                "deferred_rows": bounded.total_deferred,
+                "shed_rows": bounded.total_shed,
+                "window_count": bounded.window_count,
+                "window_fingerprint_verified": True,  # asserted above
+            },
             "total_count": base.total_count,
             "replan_reasons": [
                 r.drift_reason for r in base.reports if r.replanned and r.batch > 0

@@ -8,13 +8,28 @@ fires (carried reducer state is migrated to the new layout).  The final
 cumulative (count, checksum) is verified against the batch oracle on the
 full concatenated input.
 
+The loop runs under ``train.elastic.PreemptionGuard`` (DESIGN.md §8): a
+SIGTERM mid-stream is caught at the next batch boundary, the engine writes
+a checkpoint with ``save_checkpoint``, and the process exits cleanly —
+rerunning with the same ``--ckpt-dir`` restores the engine mid-stream and
+finishes the remaining batches with bit-identical fingerprints.
+
 Run:  PYTHONPATH=src python examples/streaming_join.py
+      PYTHONPATH=src python examples/streaming_join.py --ckpt-dir /tmp/sj
+      (kill -TERM the process mid-run, then rerun the same command)
 """
+import argparse
+import sys
+
 import numpy as np
 
 from repro.core import two_way
 from repro.mapreduce import oracle_join
 from repro.stream import StreamConfig, StreamingJoinEngine
+from repro.train import PreemptionGuard
+from repro.train.checkpoint import latest_step
+
+N_BATCHES = 8
 
 
 def zipf_batch(rng, shift, n_r=1200, n_s=300, domain=3000, a=1.6):
@@ -26,24 +41,55 @@ def zipf_batch(rng, shift, n_r=1200, n_s=300, domain=3000, a=1.6):
     return {"R": r, "S": s}
 
 
-def main() -> None:
-    rng = np.random.default_rng(0)
-    query = two_way()
-    engine = StreamingJoinEngine(
-        query,
-        StreamConfig(q=120, decay=0.5, load_factor=2.0),
-        log_fn=print,  # replan events and per-batch telemetry
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--ckpt-dir",
+        default=None,
+        help="checkpoint directory; enables SIGTERM-safe resume",
     )
+    args = parser.parse_args(argv)
 
-    print(f"streaming {query} with a skew shift after batch 3\n")
-    for i in range(8):
-        shift = 0 if i < 4 else 1300  # the drift: heavy values move
-        report = engine.ingest(zipf_batch(rng, shift))
-        if report.replanned and report.batch > 0:
-            print(
-                f"  >>> REPLAN (epoch {report.plan_epoch}): {report.drift_reason}; "
-                f"migrated {report.migrated_tuples} emissions"
-            )
+    query = two_way()
+    config = StreamConfig(q=120, decay=0.5, load_factor=2.0)
+
+    start_batch = 0
+    if args.ckpt_dir is not None and latest_step(args.ckpt_dir) is not None:
+        engine = StreamingJoinEngine.restore(
+            args.ckpt_dir, query, config, log_fn=print
+        )
+        start_batch = len(engine.reports)
+        print(f"resumed from checkpoint at batch {start_batch}\n")
+    else:
+        engine = StreamingJoinEngine(query, config, log_fn=print)
+        print(f"streaming {query} with a skew shift after batch 3\n")
+
+    # the batch stream is a pure function of the batch index, so a resumed
+    # run regenerates exactly the batches the interrupted run never ingested
+    rngs = [np.random.default_rng(0)]
+    for _ in range(N_BATCHES):
+        rngs.append(np.random.default_rng(rngs[-1].integers(2**63)))
+
+    with PreemptionGuard() as guard:
+        for i in range(start_batch, N_BATCHES):
+            shift = 0 if i < 4 else 1300  # the drift: heavy values move
+            report = engine.ingest(zipf_batch(rngs[i], shift))
+            if report.replanned and report.batch > 0:
+                print(
+                    f"  >>> REPLAN (epoch {report.plan_epoch}): "
+                    f"{report.drift_reason}; "
+                    f"migrated {report.migrated_tuples} emissions"
+                )
+            if guard.should_stop:
+                if args.ckpt_dir is None:
+                    print("\npreempted (no --ckpt-dir): stopping cleanly")
+                    return 1
+                path = engine.save_checkpoint(args.ckpt_dir)
+                print(
+                    f"\npreempted at batch {report.batch}: "
+                    f"checkpointed to {path}; rerun to resume"
+                )
+                return 0
 
     print(f"\nreplans: {engine.replan_count}, "
           f"cumulative comm: {engine.cumulative_comm} tuples, "
@@ -53,7 +99,8 @@ def main() -> None:
     assert (engine.total_count, engine.total_checksum) == (count, checksum)
     print(f"verified: cumulative count/checksum == batch oracle "
           f"({count} results, checksum {checksum:#010x})")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -166,12 +166,19 @@ def run_join_speculative(
     n_shards: int = 4,
     max_workers: int = 4,
     speculate_after: float = 3.0,
+    max_attempts: int = 3,
+    injector=None,
 ) -> JoinResult:
     """run_join with the reduce phase over-decomposed into reducer shards
     executed under speculative re-execution (straggler mitigation,
     DESIGN.md §5).  Each shard re-runs the jitted pipeline restricted to a
     block of residual joins; results combine associatively (counts and
-    checksums add mod 2^32), so duplicate completions are idempotent."""
+    checksums add mod 2^32), so duplicate completions are idempotent.
+
+    Shard failures are retried up to ``max_attempts`` submissions; a shard
+    that still fails raises here with its error — a partial join result is
+    never returned silently.  ``injector`` (``repro.testing.faults``)
+    deterministically faults chosen attempts to exercise those paths."""
     from .straggler import run_with_speculation
 
     residuals = plan.residuals
@@ -201,7 +208,18 @@ def run_join_speculative(
         [make_shard(b) for b in blocks],
         max_workers=max_workers,
         speculate_after=speculate_after,
+        max_attempts=max_attempts,
+        injector=injector,
     )
+    if injector is not None:
+        injector.resolve(outcomes)
+    failed = [o for o in outcomes if o.error is not None]
+    if failed:
+        raise RuntimeError(
+            f"{len(failed)} reduce shard(s) failed after "
+            f"{max_attempts} attempts: "
+            + "; ".join(f"shard {o.shard_id}: {o.error}" for o in failed)
+        )
     results: list[JoinResult] = [o.result for o in outcomes]
     return JoinResult(
         count=sum(r.count for r in results),

@@ -6,6 +6,13 @@ than ``speculate_after`` x the median completed-shard time gets a backup
 execution; the first result wins.  Because shards are deterministic pure
 functions, duplicate completion is harmless (results are idempotent).
 
+Failures are first-class (DESIGN.md §8): a shard attempt that raises is
+retried up to ``max_attempts`` total submissions; a shard that exhausts
+its attempts ends with ``ShardOutcome.error`` set — an explicit report the
+caller must handle, never a silent loss.  A ``repro.testing.faults``
+``FaultInjector`` can wrap each attempt to exercise exactly these paths
+deterministically (drop / duplicate / delay / preempt).
+
 On a real pod the backup lands on a different host; here workers are
 threads, which is the same control plane with a process-local executor.
 """
@@ -21,10 +28,11 @@ from typing import Callable, Sequence
 @dataclasses.dataclass
 class ShardOutcome:
     shard_id: int
-    result: object
-    attempts: int
+    result: object  # None iff the shard failed terminally
+    attempts: int  # total submissions (initial + retries + backups)
     speculated: bool
     elapsed_s: float
+    error: str | None = None  # terminal failure after retries, else None
 
 
 def run_with_speculation(
@@ -33,33 +41,66 @@ def run_with_speculation(
     speculate_after: float = 3.0,
     poll_interval_s: float = 0.01,
     min_completed_before_speculation: int = 2,
+    max_attempts: int = 3,
+    injector=None,
 ) -> list[ShardOutcome]:
-    """Run every shard; re-issue stragglers; return per-shard outcomes."""
+    """Run every shard; re-issue stragglers and failed attempts; return one
+    outcome per shard.  ``injector`` (``repro.testing.faults``) wraps each
+    attempt for deterministic fault injection; ``max_attempts`` bounds total
+    submissions per shard, after which the outcome carries ``error``."""
     outcomes: dict[int, ShardOutcome] = {}
     lock = threading.Lock()
 
+    def wrapped(i: int, attempt: int) -> Callable[[], object]:
+        fn = shard_fns[i]
+        return injector.wrap(i, attempt, fn) if injector is not None else fn
+
     with ThreadPoolExecutor(max_workers=max_workers) as pool:
         start = {i: time.monotonic() for i in range(len(shard_fns))}
-        attempts: dict[int, int] = {i: 1 for i in range(len(shard_fns))}
+        submitted: dict[int, int] = {i: 0 for i in range(len(shard_fns))}
         speculated: set[int] = set()
-        futures: dict[Future, int] = {
-            pool.submit(fn): i for i, fn in enumerate(shard_fns)
-        }
+        futures: dict[Future, int] = {}
+        for i in range(len(shard_fns)):
+            copies = 1 + (
+                injector.extra_initial_attempts(i) if injector is not None else 0
+            )
+            for _ in range(copies):
+                submitted[i] += 1
+                futures[pool.submit(wrapped(i, submitted[i]))] = i
         durations: list[float] = []
 
         while futures:
-            done, _ = wait(list(futures), timeout=poll_interval_s, return_when=FIRST_COMPLETED)
+            done, _ = wait(
+                list(futures), timeout=poll_interval_s, return_when=FIRST_COMPLETED
+            )
             now = time.monotonic()
             for f in done:
                 i = futures.pop(f)
                 if i in outcomes:
                     continue  # backup finished after primary; ignore
+                exc = f.exception()
+                if exc is not None:
+                    if submitted[i] < max_attempts:
+                        submitted[i] += 1
+                        futures[pool.submit(wrapped(i, submitted[i]))] = i
+                    elif not any(j == i for j in futures.values()):
+                        # out of attempts and no sibling in flight: report
+                        with lock:
+                            outcomes[i] = ShardOutcome(
+                                shard_id=i,
+                                result=None,
+                                attempts=submitted[i],
+                                speculated=i in speculated,
+                                elapsed_s=now - start[i],
+                                error=f"{type(exc).__name__}: {exc}",
+                            )
+                    continue
                 elapsed = now - start[i]
                 with lock:
                     outcomes[i] = ShardOutcome(
                         shard_id=i,
                         result=f.result(),
-                        attempts=attempts[i],
+                        attempts=submitted[i],
                         speculated=i in speculated,
                         elapsed_s=elapsed,
                     )
@@ -71,9 +112,11 @@ def run_with_speculation(
                     if i in outcomes or i in speculated:
                         continue
                     if now - start[i] > speculate_after * max(med, 1e-4):
+                        if submitted[i] >= max_attempts:
+                            continue  # attempt budget exhausted
                         speculated.add(i)
-                        attempts[i] += 1
-                        futures[pool.submit(shard_fns[i])] = i
+                        submitted[i] += 1
+                        futures[pool.submit(wrapped(i, submitted[i]))] = i
             # drop futures whose shard already completed via another attempt
             for f, i in list(futures.items()):
                 if i in outcomes and f.done():

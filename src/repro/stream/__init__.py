@@ -1,28 +1,46 @@
 """Streaming SharesSkew: online micro-batch joins with drift-triggered
-replanning (DESIGN.md §6; fused ingest hot path: §7).
+replanning (DESIGN.md §6; fused ingest hot path: §7; bounded state: §8).
 
-  * ``sketch``  — decaying Count-Min + SpaceSaving heavy-hitter tracking
-  * ``drift``   — cost-model staleness checks for the running plan
-  * ``engine``  — stateful executor with carried reducer state; with
+  * ``sketch``    — decaying Count-Min + SpaceSaving heavy-hitter tracking
+  * ``drift``     — cost-model staleness checks for the running plan
+  * ``engine``    — stateful executor with carried reducer state; with
     ``StreamConfig(fused_ingest=True)`` the per-batch hot path runs
     through the ``kernels.ingest_fused`` Pallas pass
-  * ``delta``   — sorted merge-join evaluation of the incremental-join
+  * ``delta``     — sorted merge-join evaluation of the incremental-join
     terms for binary single-column joins (the fused path's delta engine)
+  * ``retention`` — windowed/TTL expiry of carried state with exact
+    window-fingerprint retraction
+  * ``admission`` — backpressure: budgeted admission, FIFO backlog,
+    explicit shedding with exact counters
 """
+from .admission import (
+    AdmissionController,
+    AdmissionDecision,
+    AdmissionPolicy,
+    replication_width,
+)
 from .drift import DriftDecision, DriftMonitor, plan_comm_on_batch, predicted_loads
 from .engine import BatchReport, StreamConfig, StreamingJoinEngine
+from .retention import RetentionPolicy, carried_tuples, remove_prefix
 from .sketch import DecayingCountMin, HHSnapshot, SpaceSaving, StreamHHTracker
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "AdmissionPolicy",
     "BatchReport",
     "DecayingCountMin",
     "DriftDecision",
     "DriftMonitor",
     "HHSnapshot",
+    "RetentionPolicy",
     "SpaceSaving",
     "StreamConfig",
     "StreamingJoinEngine",
     "StreamHHTracker",
+    "carried_tuples",
     "plan_comm_on_batch",
     "predicted_loads",
+    "remove_prefix",
+    "replication_width",
 ]

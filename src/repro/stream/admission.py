@@ -1,0 +1,176 @@
+"""Backpressure / admission control on streaming ingest (DESIGN.md §8).
+
+The paper's capacity bound ``q`` is solved per batch: the plan guarantees
+per-reducer arrivals ≈ q *for the batch size it was planned against*.  An
+overloaded producer can hand the engine a batch far larger than that, and
+the §6 engine would ship it anyway — blowing the VMEM/time budget the plan
+was solved for.  Admission control turns overload into graceful
+degradation with **exact accounting**:
+
+  * Per relation, the per-batch admission budget is derived from the live
+    plan and sketch: a plan with K reducers and replication width W_rel
+    spreads ``n`` admitted rows into ~``n * W_rel / K`` arrivals per
+    reducer, so the budget is ``headroom * q * K / W_rel`` rows — the
+    largest batch the running plan can absorb within ``headroom`` × its
+    solved capacity.  When the sketch predicts a *concentrated* hot value
+    (an unpinned heavy hitter hashes to one grid coordinate — the overload
+    signal of ``stream.drift``), the budget is tightened by the predicted
+    concentration factor so a skewed inflow is throttled harder than a
+    uniform one.
+  * Arrivals beyond the budget are **deferred**: queued in a FIFO backlog,
+    re-offered ahead of the next batch.  Joins are multiset-associative,
+    so deferral never loses or duplicates results — it only shifts which
+    batch emits them; the cumulative fingerprint after the backlog drains
+    equals the oracle on everything admitted.
+  * A backlog beyond ``max_backlog_rows`` is **shed** oldest-first, each
+    drop counted per relation (``BatchReport.shed``).  Shedding is the
+    only lossy action in the engine and is always explicit — the counters
+    are exact, never sampled.
+
+Everything is off by default (``AdmissionPolicy()`` admits unconditionally)
+so the §6 baseline behavior is unchanged unless configured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.planner import SharesSkewPlan
+from repro.core.schema import JoinQuery
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Knobs for per-batch admission.  ``headroom=None`` (default) disables
+    admission control entirely (admit everything, defer/shed nothing)."""
+
+    headroom: float | None = None  # budget = headroom * q * K / W_rel rows
+    max_backlog_rows: int = 100_000  # per relation; beyond this, shed
+    min_admit: int = 32  # never starve a relation below this many rows
+
+    def __post_init__(self):
+        if self.headroom is not None and self.headroom <= 0:
+            raise ValueError("headroom must be > 0")
+        if self.max_backlog_rows < 0:
+            raise ValueError("max_backlog_rows must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.headroom is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Exact per-relation accounting for one batch boundary."""
+
+    admitted: dict[str, int]  # rows entering the engine this batch
+    deferred: dict[str, int]  # rows left queued in the backlog
+    shed: dict[str, int]  # rows dropped (permanently) this batch
+    budget: dict[str, int]  # the budget each relation was held to
+
+    @property
+    def total_deferred(self) -> int:
+        return int(sum(self.deferred.values()))
+
+    @property
+    def total_shed(self) -> int:
+        return int(sum(self.shed.values()))
+
+
+def replication_width(plan: SharesSkewPlan, rel_name: str) -> int:
+    """Total map-phase emission width of one relation under ``plan`` —
+    Σ over residuals of the integer-share replication, i.e. the W in
+    ``map_phase``'s [N, W] destination block."""
+    rel = next(r for r in plan.query.relations if r.name == rel_name)
+    return max(
+        1, sum(res.int_replication(rel.attrs) for res in plan.residuals)
+    )
+
+
+class AdmissionController:
+    """Stateless budget math + stateful FIFO backlog per relation."""
+
+    def __init__(self, policy: AdmissionPolicy, query: JoinQuery, q: float):
+        self.policy = policy
+        self.query = query
+        self.q = float(q)
+        self.backlog: dict[str, np.ndarray] = {
+            r.name: np.zeros((0, r.arity), dtype=np.int64)
+            for r in query.relations
+        }
+        self.total_deferred = 0  # rows that waited at least one batch
+        self.total_shed = 0
+
+    # ---- budget ------------------------------------------------------------
+    def budgets(
+        self,
+        plan: SharesSkewPlan | None,
+        concentration: float = 1.0,
+    ) -> dict[str, int]:
+        """Per-relation row budgets for the next batch.  ``concentration``
+        is the sketch's predicted worst per-reducer load ÷ q for the
+        current inflow (>= 1 tightens the budget): a hot unpinned value
+        concentrates arrivals, so fewer rows fit the same capacity."""
+        if not self.policy.enabled or plan is None:
+            return {r.name: np.iinfo(np.int64).max for r in self.query.relations}
+        k = max(1, plan.total_reducers)
+        out = {}
+        for rel in self.query.relations:
+            w = replication_width(plan, rel.name)
+            budget = self.policy.headroom * self.q * k / w
+            budget /= max(1.0, float(concentration))
+            out[rel.name] = max(self.policy.min_admit, int(budget))
+        return out
+
+    # ---- admission ---------------------------------------------------------
+    def admit(
+        self,
+        batch: Mapping[str, np.ndarray],
+        plan: SharesSkewPlan | None,
+        concentration: float = 1.0,
+    ) -> tuple[dict[str, np.ndarray], AdmissionDecision]:
+        """Split (backlog ++ batch) into admitted rows (FIFO, backlog
+        first) and a new backlog; shed backlog overflow oldest-first.
+        Returns (admitted rows per relation, exact accounting)."""
+        budgets = self.budgets(plan, concentration)
+        admitted_rows: dict[str, np.ndarray] = {}
+        admitted_n, deferred_n, shed_n, budget_rep = {}, {}, {}, {}
+        for rel in self.query.relations:
+            nm = rel.name
+            pending = np.concatenate(
+                [self.backlog[nm], np.asarray(batch[nm]).reshape(-1, rel.arity)],
+                axis=0,
+            )
+            b = budgets[nm]
+            take = min(len(pending), b)
+            admitted_rows[nm] = pending[:take]
+            rest = pending[take:]
+            over = max(0, len(rest) - self.policy.max_backlog_rows)
+            if over:
+                rest = rest[over:]  # shed oldest-first
+            self.backlog[nm] = rest
+            admitted_n[nm] = int(take)
+            deferred_n[nm] = int(len(rest))
+            shed_n[nm] = int(over)
+            budget_rep[nm] = int(min(b, np.iinfo(np.int64).max))
+        decision = AdmissionDecision(admitted_n, deferred_n, shed_n, budget_rep)
+        self.total_deferred += decision.total_deferred
+        self.total_shed += decision.total_shed
+        return admitted_rows, decision
+
+    # ---- checkpoint --------------------------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        out = {f"backlog/{nm}": arr for nm, arr in self.backlog.items()}
+        out["totals"] = np.array(
+            [self.total_deferred, self.total_shed], dtype=np.int64
+        )
+        return out
+
+    def load_state_dict(self, state: Mapping[str, np.ndarray]) -> None:
+        for nm in self.backlog:
+            self.backlog[nm] = np.asarray(state[f"backlog/{nm}"])
+        totals = np.asarray(state["totals"])
+        self.total_deferred = int(totals[0])
+        self.total_shed = int(totals[1])

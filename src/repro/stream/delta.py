@@ -26,6 +26,12 @@ The index is maintained incrementally: appending a batch is a host-side
 sorted merge (O(M + E) memcpy), never a re-sort of history; only a replan
 rebuilds it from scratch, mirroring how ``engine`` treats its binned state.
 Queries with >2 relations or multi-column links keep the einsum path.
+
+Each entry carries the id of the batch that contributed it, so windowed
+retention (DESIGN.md §8) can ``expire`` one batch's emissions exactly — a
+boolean-mask compaction over the retained arrays, O(M), no re-sort and no
+re-route.  Expiry plus the engine's retraction probes keep the windowed
+fingerprint bit-identical to the einsum path on the retained suffix.
 """
 from __future__ import annotations
 
@@ -70,8 +76,9 @@ class SortedDeltaIndex:
         self._seed = {nm: weight_seed + i for i, nm in enumerate(spec.rel_names)}
         self._keys_by_rel: dict[str, np.ndarray] = {}
         self._weights_by_rel: dict[str, np.ndarray] = {}
+        self._batch_by_rel: dict[str, np.ndarray] = {}  # contributing batch id
         for nm in spec.rel_names:
-            self.rebuild(nm, np.empty(0, np.int32), np.empty((0, 1), np.int32))
+            self.clear(nm)
 
     # ---- maintenance -------------------------------------------------------
     def _flat(
@@ -85,13 +92,23 @@ class SortedDeltaIndex:
         order = np.argsort(keys, kind="stable")
         return keys[order], w[order]
 
-    def rebuild(self, name: str, dest: np.ndarray, rows: np.ndarray) -> None:
-        """Reset a relation's index from scratch (replan migration)."""
-        self._keys_by_rel[name], self._weights_by_rel[name] = self._flat(
-            name, dest, rows
-        )
+    def clear(self, name: str) -> None:
+        """Reset a relation's index from scratch (replan migration rebuilds
+        by re-appending each retained batch with its id)."""
+        self._keys_by_rel[name] = np.empty(0, np.int64)
+        self._weights_by_rel[name] = np.empty(0, np.uint32)
+        self._batch_by_rel[name] = np.empty(0, np.int64)
 
-    def append(self, name: str, dest: np.ndarray, rows: np.ndarray) -> None:
+    def rebuild(
+        self, name: str, dest: np.ndarray, rows: np.ndarray, batch_id: int = 0
+    ) -> None:
+        """Reset a relation's index to exactly one batch of emissions."""
+        self.clear(name)
+        self.append(name, dest, rows, batch_id)
+
+    def append(
+        self, name: str, dest: np.ndarray, rows: np.ndarray, batch_id: int = 0
+    ) -> None:
         """Sorted-merge a batch of emissions into a relation's index."""
         if dest.size == 0:
             return
@@ -102,6 +119,21 @@ class SortedDeltaIndex:
         self._weights_by_rel[name] = np.insert(
             self._weights_by_rel[name], pos, new_w
         )
+        self._batch_by_rel[name] = np.insert(
+            self._batch_by_rel[name], pos, np.int64(batch_id)
+        )
+
+    def expire(self, name: str, batch_id: int) -> int:
+        """Remove every entry batch ``batch_id`` contributed to a relation's
+        index (windowed retention).  Returns the number removed."""
+        ids = self._batch_by_rel[name]
+        keep = ids != np.int64(batch_id)
+        removed = int(ids.size - keep.sum())
+        if removed:
+            self._keys_by_rel[name] = self._keys_by_rel[name][keep]
+            self._weights_by_rel[name] = self._weights_by_rel[name][keep]
+            self._batch_by_rel[name] = ids[keep]
+        return removed
 
     # ---- the contraction ---------------------------------------------------
     def probe(

@@ -170,3 +170,20 @@ class DriftMonitor:
             worst_load=worst_load,
             worst_value=worst_value,
         )
+
+    # ---- checkpoint (DESIGN.md §8) -----------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """The two mutables that make drift decisions history-dependent:
+        the install-time comm baseline and the cooldown counter.  Restoring
+        them keeps post-restore replan decisions bit-identical to an
+        uninterrupted run."""
+        return {
+            "scalars": np.array(
+                [self._baseline_comm, float(self._since_replan)], np.float64
+            )
+        }
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        scalars = np.asarray(state["scalars"])
+        self._baseline_comm = float(scalars[0])
+        self._since_replan = int(scalars[1])

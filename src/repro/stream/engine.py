@@ -9,28 +9,48 @@ except when a drift replan changes the reducer layout, which is a counted
 state migration).
 
 Per batch:
-  1. sketches observe the batch (``StreamHHTracker``, optionally via the
+  1. admission control (``stream.admission``, optional): the backlog and
+     the incoming batch are admitted up to a budget derived from the plan's
+     ``q`` and the live sketch; the rest is deferred or shed with exact
+     counters (``BatchReport.deferred/shed``);
+  2. windowed retention (``stream.retention``, optional): batches that
+     left the retained window are *retracted* — their contribution is
+     subtracted from the window fingerprint via the same telescoping
+     identity used for insertion, and their tuples leave carried state
+     with a prefix shift (no shuffle);
+  3. sketches observe the batch (``StreamHHTracker``, optionally via the
      Pallas ``cms_update`` kernel);
-  2. the ``DriftMonitor`` re-evaluates the running plan's cost model
+  4. the ``DriftMonitor`` re-evaluates the running plan's cost model
      against the live sketch; on drift, ``plan_with_hh`` installs a fresh
      plan and accumulated state is re-routed under it (migration);
-  3. new tuples are routed with ``mapreduce.keys.map_phase`` — the same
+  5. new tuples are routed with ``mapreduce.keys.map_phase`` — the same
      vectorized recursive_keys used by the batch executor and the
      distributed shuffle — and binned per reducer;
-  4. the join delta is the n-term telescoping expansion
+  6. the join delta is the n-term telescoping expansion
      Δ(R_1 ⋈ ... ⋈ R_n) = Σ_i  R_1^all ⋈ ... ⋈ R_{i-1}^all ⋈ ΔR_i
                                 ⋈ R_{i+1}^old ⋈ ... ⋈ R_n^old
      evaluated with ``mapreduce.local_join.local_join_count_checksum`` over
      (old | new | merged) per-reducer bins, so counts and orderless
      checksums accumulate associatively mod 2^32.
 
-``recompute_distributed()`` replays the full accumulated input through
-``mapreduce.shuffle.run_distributed`` under the current plan — the
-cross-check that carried state lost nothing.
+With retention off (the default) the cumulative and window fingerprints
+coincide and ``recompute_distributed()`` replays the full accumulated
+input through ``mapreduce.shuffle.run_distributed`` under the current plan
+— the cross-check that carried state lost nothing.  With retention on,
+carried state is the retained suffix only: the cross-check becomes
+``recompute_distributed(window=True)`` against the *window* fingerprint,
+and asking for the full-stream cross-check raises (the input needed to
+reproduce it no longer exists).
 
-With ``StreamConfig(fused_ingest=True)`` (DESIGN.md §7) steps 1 and 3 run
+``save_checkpoint()`` / ``restore()`` serialize sketches, incumbent plan,
+drift-monitor state, retained history, window clock, and admission backlog
+through ``train.checkpoint`` (atomic step dirs + LATEST pointer), so a
+preempted engine resumes mid-stream to the same cumulative (count,
+checksum) — see DESIGN.md §8 for the format.
+
+With ``StreamConfig(fused_ingest=True)`` (DESIGN.md §7) steps 3 and 5 run
 as ONE speculative pass per relation through ``kernels.ingest_fused``
-(destinations + sketch increment + pack plan), and step 4's terms use the
+(destinations + sketch increment + pack plan), and step 6's terms use the
 sorted merge join of ``stream.delta`` for binary single-column queries.
 Every fused-path result is bit-identical to this baseline, which stays in
 the tree as the correctness oracle.
@@ -38,6 +58,8 @@ the tree as the correctness oracle.
 from __future__ import annotations
 
 import dataclasses
+import pickle
+import time
 from typing import Callable
 
 import jax.numpy as jnp
@@ -52,11 +74,15 @@ from repro.mapreduce.local_join import (
     local_join_count_checksum_jit,
 )
 
+from .admission import AdmissionController, AdmissionPolicy
 from .delta import SortedDeltaIndex
 from .drift import DriftDecision, DriftMonitor
+from .retention import RetentionPolicy, carried_tuples, remove_prefix
 from .sketch import StreamHHTracker
 
 _MASK32 = 0xFFFFFFFF
+
+CHECKPOINT_FORMAT = 1  # bump on any layout change; restore() validates it
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +109,10 @@ class StreamConfig:
     fused_ingest: bool = False
     fused_block: int = 256  # tuple block per grid step / DMA slot
     fused_double_buffer: bool = True  # explicit DMA double buffering
+    # Bounded state (DESIGN.md §8): both default to off, reproducing the
+    # unbounded §6 baseline bit-for-bit.
+    retention: RetentionPolicy = RetentionPolicy()
+    admission: AdmissionPolicy = AdmissionPolicy()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +131,16 @@ class BatchReport:
     migrated_tuples: int  # state re-routed by this batch's replan (0 if none)
     max_load: int  # worst per-reducer arrivals this plan epoch
     hh_values: dict[str, list[int]]  # live plan's pinned HH set
+    # bounded-state telemetry (DESIGN.md §8); zeros when retention and
+    # admission are off
+    deferred: dict[str, int]  # rows queued in the backlog after this batch
+    shed: dict[str, int]  # rows dropped by admission this batch
+    expired_batches: int  # batches retired from the window this ingest
+    retracted_count: int  # join results retracted from the window fingerprint
+    window_count: int  # fingerprint of the retained window (== total_* when
+    window_checksum: int  # retention is off)
+    carried_tuples: int  # retained emissions across all reducers/relations
+    max_carried: int  # worst per-reducer retained occupancy
 
     @property
     def total_comm(self) -> int:
@@ -153,6 +193,7 @@ class StreamingJoinEngine:
         query: JoinQuery,
         config: StreamConfig,
         log_fn: Callable[[str], None] | None = None,
+        clock: Callable[[], float] | None = None,
     ):
         self.query = query
         self.config = config
@@ -176,9 +217,20 @@ class StreamingJoinEngine:
         self.plan: SharesSkewPlan | None = None
         self.plan_epoch = -1
         self._log = log_fn or (lambda _msg: None)
+        self._clock = clock or time.monotonic
 
-        # raw history (per relation, all batches) for replan migration
+        # retained raw history (per relation, one entry per retained batch)
+        # for replan migration; with retention on, expired batches are
+        # dropped so migration re-routes the retained suffix only
         self._history: dict[str, list[np.ndarray]] = {
+            r.name: [] for r in query.relations
+        }
+        # window bookkeeping, aligned with _history entries
+        self._retained_ids: list[int] = []  # batch indices still retained
+        self._batch_ts: list[float] = []  # ingest clock per retained batch
+        # per-batch routed emissions under the CURRENT plan — kept only
+        # when retention is on (retraction needs them); rebuilt at replans
+        self._routed_log: dict[str, list[_Routed]] = {
             r.name: [] for r in query.relations
         }
         # carried reducer state under the CURRENT plan, kept binned:
@@ -191,9 +243,19 @@ class StreamingJoinEngine:
 
         self.total_count = 0
         self.total_checksum = 0
+        self.window_count = 0  # fingerprint of the retained window
+        self.window_checksum = 0
         self.cumulative_comm = 0
         self.total_migrated = 0
+        self.expired_batches = 0  # batches retired from the window so far
+        self.total_retracted = 0  # results retracted from the window so far
         self.reports: list[BatchReport] = []
+
+        self._controller: AdmissionController | None = (
+            AdmissionController(config.admission, query, config.q)
+            if config.admission.enabled
+            else None
+        )
 
         # fused-ingest bookkeeping: columns the kernel must sketch per
         # relation (tracker attr order), and a loud counter so callers can
@@ -389,40 +451,173 @@ class StreamingJoinEngine:
         valid[routed.dest, slots] = True
         return bins, valid, new_occup
 
+    def _rebuild_routed_state(self) -> int:
+        """Re-route every retained batch under ``self.plan`` from scratch:
+        binned state, per-reducer loads, the per-batch routed log (when
+        retention needs it), and the sorted delta index.  Batch-sequential
+        scatters reproduce the concatenated route bit-for-bit (map_phase is
+        per-row deterministic and appends preserve arrival order).  Returns
+        the number of emissions routed — the migration count at replans.
+        This is also where retention's deferred *compaction* lands: bins
+        are rebuilt at tight capacity over the retained suffix only, so
+        expiry never needs its own shuffle or re-route."""
+        keep_log = self.config.retention.enabled
+        self._loads = np.zeros(self.plan.total_reducers, dtype=np.int64)
+        self._routed_log = {r.name: [] for r in self.query.relations}
+        if self._delta_index is not None:
+            for nm in self.spec.rel_names:
+                self._delta_index.clear(nm)
+        for rel in self.query.relations:
+            self._state[rel.name] = self._empty_state(rel.arity)
+        total = 0
+        for i, bid in enumerate(self._retained_ids):
+            for rel in self.query.relations:
+                nm = rel.name
+                routed = self._route_any(rel, self._history[nm][i])
+                self._state[nm] = self._scatter_any(self._state[nm], routed)
+                if keep_log:
+                    self._routed_log[nm].append(routed)
+                if self._delta_index is not None:
+                    self._delta_index.append(nm, routed.dest, routed.rows, bid)
+                self._loads += routed.counts
+                total += int(routed.dest.size)
+        return total
+
     def _install(self, plan: SharesSkewPlan, batch: dict[str, np.ndarray]) -> int:
-        """Switch to ``plan``; re-route accumulated history under it.
+        """Switch to ``plan``; re-route retained history under it.
         Returns the number of migrated emissions."""
         self.plan = plan
         self.plan_epoch += 1
         self.monitor.install(plan, self.query, batch)
-        self._loads = np.zeros(plan.total_reducers, dtype=np.int64)
-        migrated = 0
-        for rel in self.query.relations:
-            state = self._empty_state(rel.arity)
-            hist = self._history[rel.name]
-            routed = None
-            if hist:
-                rows = np.concatenate(hist, axis=0)
-                routed = self._route_any(rel, rows)
-                state = self._scatter_any(state, routed)
-                migrated += int(routed.dest.size)
-                self._loads += routed.counts
-            self._state[rel.name] = state
-            if self._delta_index is not None:
-                # re-key the merge-join index under the new plan's reducers
-                if routed is not None:
-                    self._delta_index.rebuild(rel.name, routed.dest, routed.rows)
-                else:
-                    self._delta_index.rebuild(
-                        rel.name,
-                        np.empty(0, np.int32),
-                        np.empty((0, rel.arity), np.int32),
-                    )
+        migrated = self._rebuild_routed_state()
         self.total_migrated += migrated
         return migrated
 
+    # ---- retention (DESIGN.md §8) ------------------------------------------
+    def _retract_sorted(
+        self, bid: int, expired: dict[str, _Routed]
+    ) -> tuple[int, int]:
+        """Retraction terms via ``SortedDeltaIndex``.  Term i of
+        join(A) − join(S) is A_1..A_{i-1} ⋈ E_i ⋈ S_{i+1}..S_n, so probing
+        runs in *reverse* relation order: E_i probes the other relation's
+        index after relations > i already expired (mirror of insertion)."""
+        idx = self._delta_index
+        names = self.spec.rel_names
+        d_count, d_checksum = 0, 0
+        for i in reversed(range(len(names))):
+            nm = names[i]
+            e = expired[nm]
+            idx.expire(nm, bid)  # E_i leaves its own index first (j == i)
+            if e.dest.size:
+                cnt, chk = idx.probe(names[1 - i], nm, e.dest, e.rows)
+                d_count += cnt
+                d_checksum = (d_checksum + chk) & _MASK32
+        return d_count, d_checksum
+
+    def _retract_einsum(
+        self,
+        expired: dict[str, _Routed],
+        survivors: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]],
+    ) -> tuple[int, int]:
+        """Retraction terms via the einsum path: j<i → current state (A,
+        expiring batch still resident), j==i → the expiring emissions E,
+        j>i → survivors S.  Exact mirror of the insertion telescoping."""
+        k = self.plan.total_reducers
+        variants: dict[str, dict[str, tuple[jnp.ndarray, jnp.ndarray]]] = {}
+        for rel in self.query.relations:
+            nm = rel.name
+            e = expired[nm]
+            ecap = _pow2(max(int(e.counts.max()) if e.dest.size else 0, 1))
+            ebins, evalid = _group_np(e.dest, e.rows, k, ecap)
+            abins, avalid, _ = self._state[nm]
+            sbins, svalid, _ = survivors[nm]
+            variants[nm] = {
+                "all": (jnp.asarray(abins), jnp.asarray(avalid)),
+                "exp": (jnp.asarray(ebins), jnp.asarray(evalid)),
+                "old": (jnp.asarray(sbins), jnp.asarray(svalid)),
+            }
+        join_fn = (
+            local_join_count_checksum_jit
+            if self.config.fused_ingest
+            else local_join_count_checksum
+        )
+        names = [r.name for r in self.query.relations]
+        d_count, d_checksum = 0, 0
+        for i, nm_i in enumerate(names):
+            if expired[nm_i].dest.size == 0:
+                continue  # E_i empty -> term contributes nothing
+            bins, valids = {}, {}
+            for j, nm_j in enumerate(names):
+                key = "all" if j < i else ("exp" if j == i else "old")
+                bins[nm_j], valids[nm_j] = variants[nm_j][key]
+            cnt, chk = join_fn(self.spec, bins, valids)
+            d_count += int(cnt)
+            d_checksum = (d_checksum + int(np.uint32(chk))) & _MASK32
+        return d_count, d_checksum
+
+    def _retract_oldest(self) -> int:
+        """Expire the oldest retained batch: subtract its window-join
+        contribution (exact, mod 2^32) and shift its tuples out of carried
+        state.  Pure host-side compute on already-routed state — expiry
+        never re-shuffles (capacity compaction rides the replan rebuild).
+        Returns the number of retracted join results."""
+        bid = self._retained_ids.pop(0)
+        self._batch_ts.pop(0)
+        expired = {nm: self._routed_log[nm].pop(0) for nm in self._routed_log}
+        for rel in self.query.relations:
+            self._history[rel.name].pop(0)
+        survivors = {
+            nm: remove_prefix(self._state[nm], expired[nm].counts)
+            for nm in self._state
+        }
+        if self._delta_index is not None:
+            cnt, chk = self._retract_sorted(bid, expired)
+        else:
+            cnt, chk = self._retract_einsum(expired, survivors)
+        self._state.update(survivors)
+        self.window_count -= cnt
+        self.window_checksum = (self.window_checksum - chk) & _MASK32
+        self.expired_batches += 1
+        self.total_retracted += cnt
+        return cnt
+
+    def _expire_due(self, now: float) -> tuple[int, int]:
+        """Retire every retained batch outside the window/TTL before the
+        next ingest.  Returns (batches expired, results retracted)."""
+        policy = self.config.retention
+        if not policy.enabled or not self._retained_ids:
+            return 0, 0
+        drop = policy.expired_prefix(
+            self._retained_ids, self._batch_ts, len(self.reports), now
+        )
+        retracted = 0
+        for _ in range(drop):
+            retracted += self._retract_oldest()
+        if drop:
+            self._log(
+                f"[stream] expired {drop} batch(es) from the window; "
+                f"retracted {retracted} results"
+            )
+        return drop, retracted
+
+    # ---- admission (DESIGN.md §8) ------------------------------------------
+    def _concentration(self) -> float:
+        """Predicted worst per-reducer load ÷ q for the live skew profile —
+        the admission budget's skew-tightening factor."""
+        from .drift import predicted_loads
+
+        if self.plan is None:
+            return 1.0
+        snapshot = self.tracker.snapshot(
+            self._threshold(), self.config.max_hh_per_attr
+        )
+        loads = predicted_loads(self.plan, snapshot)
+        worst = max((load for _, _, load in loads), default=0.0)
+        return max(1.0, worst / max(self.config.q, 1e-9))
+
+    # ---- delta join --------------------------------------------------------
     def _delta_join_sorted(
-        self, new_routed: dict[str, _Routed]
+        self, new_routed: dict[str, _Routed], batch_id: int
     ) -> tuple[int, int]:
         """The telescoping terms via ``SortedDeltaIndex`` (binary joins on
         one shared column, fused path).  Evaluating term i against the
@@ -438,16 +633,18 @@ class StreamingJoinEngine:
                 cnt, chk = idx.probe(names[1 - i], nm, routed.dest, routed.rows)
                 d_count += cnt
                 d_checksum = (d_checksum + chk) & _MASK32
-            idx.append(nm, routed.dest, routed.rows)
+            idx.append(nm, routed.dest, routed.rows, batch_id)
             self._state[nm] = self._scatter_any(self._state[nm], routed)
         return d_count, d_checksum
 
-    def _delta_join(self, new_routed: dict[str, _Routed]) -> tuple[int, int]:
+    def _delta_join(
+        self, new_routed: dict[str, _Routed], batch_id: int
+    ) -> tuple[int, int]:
         """Telescoping incremental join of the new emissions against carried
         state, then fold the batch into the state.  Returns
         (delta_count, delta_checksum)."""
         if self._delta_index is not None:
-            return self._delta_join_sorted(new_routed)
+            return self._delta_join_sorted(new_routed, batch_id)
         k = self.plan.total_reducers
         variants: dict[str, dict[str, tuple[jnp.ndarray, jnp.ndarray]]] = {}
         merged: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
@@ -494,10 +691,30 @@ class StreamingJoinEngine:
     # ---- public API --------------------------------------------------------
     def ingest(self, batch: dict[str, np.ndarray]) -> BatchReport:
         """Process one micro-batch; returns its telemetry."""
-        batch = {
+        offered = {
             r.name: np.asarray(batch[r.name]).reshape(-1, r.arity)
             for r in self.query.relations
         }
+        now = self._clock()
+
+        # 1. admission: backlog + batch against the live budget
+        if self._controller is not None:
+            admitted, decision = self._controller.admit(
+                offered, self.plan, self._concentration()
+            )
+            deferred, shed = decision.deferred, decision.shed
+        else:
+            admitted = offered
+            deferred = {nm: 0 for nm in offered}
+            shed = {nm: 0 for nm in offered}
+        batch = {
+            nm: np.ascontiguousarray(rows) for nm, rows in admitted.items()
+        }
+
+        # 2. retention: retire batches that left the window BEFORE this one
+        #    joins, so new tuples only meet retained partners
+        expired_n, retracted = self._expire_due(now)
+
         # speculative routing under the plan that was live when the batch
         # arrived; discarded (and redone) only if this batch triggers a
         # replan, so the common case is ONE fused pass per relation
@@ -562,18 +779,27 @@ class StreamingJoinEngine:
             comm[rel.name] = int(routed.dest.size)
             self._loads += routed.counts
 
-        d_count, d_checksum = self._delta_join(new_routed)
+        bid = len(self.reports)
+        d_count, d_checksum = self._delta_join(new_routed, bid)
         self.total_count += d_count
         self.total_checksum = (self.total_checksum + d_checksum) & _MASK32
+        self.window_count += d_count
+        self.window_checksum = (self.window_checksum + d_checksum) & _MASK32
         self.cumulative_comm += sum(comm.values())
 
         # raw rows are kept only for replan migration; the binned reducer
-        # state was already folded by _delta_join
+        # state was already folded by _delta_join.  The routed log feeds
+        # retraction and is kept only under retention.
+        self._retained_ids.append(bid)
+        self._batch_ts.append(now)
         for rel in self.query.relations:
             self._history[rel.name].append(batch[rel.name])
+            if self.config.retention.enabled:
+                self._routed_log[rel.name].append(new_routed[rel.name])
 
+        carried, max_carried = carried_tuples(self._state)
         report = BatchReport(
-            batch=len(self.reports),
+            batch=bid,
             plan_epoch=self.plan_epoch,
             replanned=replanned,
             drift_reason=reason,
@@ -587,6 +813,14 @@ class StreamingJoinEngine:
             hh_values={
                 a: np.asarray(v).tolist() for a, v in self.plan.hh_values.items()
             },
+            deferred=deferred,
+            shed=shed,
+            expired_batches=expired_n,
+            retracted_count=retracted,
+            window_count=self.window_count,
+            window_checksum=self.window_checksum,
+            carried_tuples=carried,
+            max_carried=max_carried,
         )
         self.reports.append(report)
         self._log(
@@ -597,7 +831,8 @@ class StreamingJoinEngine:
         return report
 
     def history_data(self) -> dict[str, np.ndarray]:
-        """The concatenation of everything ingested so far."""
+        """The concatenation of every *retained* batch — the full stream
+        when retention is off, the window suffix when it is on."""
         return {
             r.name: (
                 np.concatenate(self._history[r.name], axis=0)
@@ -607,16 +842,178 @@ class StreamingJoinEngine:
             for r in self.query.relations
         }
 
-    def recompute_distributed(self, **kwargs):
-        """Replay the full accumulated input through the distributed shuffle
-        under the current plan (correctness cross-check for carried state)."""
+    def recompute_distributed(self, window: bool = False, **kwargs):
+        """Replay the retained input through the distributed shuffle under
+        the current plan (correctness cross-check for carried state).
+
+        With retention off this reproduces the cumulative fingerprint.
+        With retention on and history expired, the full-stream input no
+        longer exists — the replay covers the retained window only, whose
+        reference is (``window_count``, ``window_checksum``); pass
+        ``window=True`` to acknowledge that, otherwise this refuses rather
+        than silently comparing a truncated replay against the full-stream
+        fingerprint."""
         from repro.mapreduce.shuffle import run_distributed
 
         if self.plan is None:
             raise RuntimeError("no batches ingested yet")
+        if self.expired_batches and not window:
+            raise RuntimeError(
+                f"retention has expired {self.expired_batches} batch(es): "
+                "the retained window cannot reproduce the full-stream "
+                "fingerprint (total_count/total_checksum).  Call "
+                "recompute_distributed(window=True) to cross-check the "
+                "retained suffix against (window_count, window_checksum)."
+            )
         return run_distributed(self.query, self.history_data(), self.plan, **kwargs)
 
     @property
     def replan_count(self) -> int:
         """Drift-triggered replans (the initial plan does not count)."""
         return sum(1 for r in self.reports if r.replanned) - (1 if self.reports else 0)
+
+    @property
+    def total_deferred(self) -> int:
+        return self._controller.total_deferred if self._controller else 0
+
+    @property
+    def total_shed(self) -> int:
+        return self._controller.total_shed if self._controller else 0
+
+    # ---- checkpoint / restore (DESIGN.md §8) -------------------------------
+    def save_checkpoint(self, directory: str, keep: int = 3) -> str:
+        """Serialize the full engine state through ``train.checkpoint``
+        (atomic step dir + LATEST pointer; step = batches ingested).
+        Everything needed for a bit-identical resume goes in: sketches,
+        drift-monitor baselines, retained history + window clock (stored as
+        ages so TTL survives a clock rebase), admission backlog, incumbent
+        plan and reports (pickled blobs), and the cumulative counters."""
+        from repro.train.checkpoint import save_checkpoint as _save
+
+        now = self._clock()
+        tree: dict = {
+            "scalars": np.array(
+                [
+                    self.total_count,
+                    self.total_checksum,
+                    self.window_count,
+                    self.window_checksum,
+                    self.cumulative_comm,
+                    self.total_migrated,
+                    self.expired_batches,
+                    self.total_retracted,
+                    self.plan_epoch,
+                    self.fused_batches,
+                ],
+                dtype=np.int64,
+            ),
+            "loads": self._loads.astype(np.int64),
+            "retained_ids": np.array(self._retained_ids, dtype=np.int64),
+            "batch_ages": np.array(
+                [now - ts for ts in self._batch_ts], dtype=np.float64
+            ),
+            "tracker": self.tracker.state_dict(),
+            "monitor": self.monitor.state_dict(),
+            "history": {
+                nm: {f"{i:06d}": np.asarray(arr) for i, arr in enumerate(lst)}
+                for nm, lst in self._history.items()
+            },
+            "blob": np.frombuffer(
+                pickle.dumps((self.plan, self.reports)), dtype=np.uint8
+            ).copy(),
+        }
+        if self._controller is not None:
+            tree["admission"] = self._controller.state_dict()
+        return _save(
+            directory,
+            step=len(self.reports),
+            tree=tree,
+            keep=keep,
+            metadata={
+                "kind": "stream_engine",
+                "format": CHECKPOINT_FORMAT,
+                "batches": len(self.reports),
+                "retained": len(self._retained_ids),
+            },
+        )
+
+    @classmethod
+    def restore(
+        cls,
+        directory: str,
+        query: JoinQuery,
+        config: StreamConfig,
+        log_fn: Callable[[str], None] | None = None,
+        clock: Callable[[], float] | None = None,
+        step: int | None = None,
+    ) -> "StreamingJoinEngine":
+        """Rebuild an engine mid-stream from a checkpoint.  ``query`` and
+        ``config`` must match the saving engine (sketch shapes/seeds are
+        config-derived).  Carried reducer state is reconstructed by
+        re-routing the retained history under the restored plan — the same
+        deterministic rebuild a replan migration performs — so subsequent
+        batches produce bit-identical fingerprints to an uninterrupted
+        run."""
+        from repro.train.checkpoint import load_checkpoint, load_manifest
+
+        manifest = load_manifest(directory, step)
+        meta = manifest.get("metadata", {})
+        if meta.get("kind") != "stream_engine":
+            raise ValueError(f"not a stream engine checkpoint: {directory}")
+        if meta.get("format") != CHECKPOINT_FORMAT:
+            raise ValueError(
+                f"checkpoint format {meta.get('format')} != "
+                f"supported {CHECKPOINT_FORMAT}"
+            )
+        _, flat = load_checkpoint(directory, step)
+
+        eng = cls(query, config, log_fn=log_fn, clock=clock)
+        plan, reports = pickle.loads(flat["blob"].tobytes())
+        eng.plan = plan
+        eng.reports = list(reports)
+        scalars = np.asarray(flat["scalars"]).tolist()
+        (
+            eng.total_count,
+            eng.total_checksum,
+            eng.window_count,
+            eng.window_checksum,
+            eng.cumulative_comm,
+            eng.total_migrated,
+            eng.expired_batches,
+            eng.total_retracted,
+            eng.plan_epoch,
+            eng.fused_batches,
+        ) = (int(s) for s in scalars)
+        eng.tracker.load_state_dict(
+            {
+                k[len("tracker/") :]: v
+                for k, v in flat.items()
+                if k.startswith("tracker/")
+            }
+        )
+        eng.monitor.load_state_dict({"scalars": flat["monitor/scalars"]})
+        eng._retained_ids = [int(i) for i in flat["retained_ids"]]
+        now = eng._clock()
+        eng._batch_ts = [now - float(a) for a in flat["batch_ages"]]
+        for rel in query.relations:
+            prefix = f"history/{rel.name}/"
+            keys = sorted(k for k in flat if k.startswith(prefix))
+            eng._history[rel.name] = [
+                np.asarray(flat[k]).reshape(-1, rel.arity) for k in keys
+            ]
+            if len(eng._history[rel.name]) != len(eng._retained_ids):
+                raise ValueError("checkpoint history/window length mismatch")
+        if eng._controller is not None:
+            eng._controller.load_state_dict(
+                {
+                    k[len("admission/") :]: v
+                    for k, v in flat.items()
+                    if k.startswith("admission/")
+                }
+            )
+        if eng.plan is not None:
+            eng._rebuild_routed_state()
+        # loads are arrivals-per-epoch telemetry (they include expired and
+        # migrated arrivals), not derivable from the retained rebuild
+        eng._loads = np.asarray(flat["loads"]).astype(np.int64)
+        return eng

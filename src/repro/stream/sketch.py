@@ -101,6 +101,22 @@ class DecayingCountMin(CountMinSketch):
         out.batches = max(self.batches, other.batches)
         return out
 
+    # ---- checkpoint (DESIGN.md §8) -----------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        return {
+            "table": self.table.copy(),
+            "scalars": np.array([self.total, float(self.batches)], np.float64),
+        }
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        table = np.asarray(state["table"], dtype=np.float64)
+        if table.shape != self.table.shape:
+            raise ValueError("checkpointed sketch table shape mismatch")
+        self.table = table.copy()
+        scalars = np.asarray(state["scalars"])
+        self.total = float(scalars[0])
+        self.batches = int(scalars[1])
+
 
 class SpaceSaving:
     """Stream-summary with ``capacity`` counters (Metwally et al. 2005).
@@ -161,6 +177,28 @@ class SpaceSaving:
         vals = np.array([v for v, _ in items], dtype=np.int64)
         cnts = np.array([c for _, c in items], dtype=np.float64)
         return vals, cnts
+
+    # ---- checkpoint (DESIGN.md §8) -----------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Counters in *insertion order* — eviction and candidate ordering
+        tie-break on it, so preserving it makes restore bit-deterministic."""
+        vals = np.array(list(self.counts), dtype=np.int64)
+        return {
+            "values": vals,
+            "counts": np.array([self.counts[v] for v in vals], np.float64),
+            "errors": np.array([self.errors[v] for v in vals], np.float64),
+        }
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        vals = np.asarray(state["values"], dtype=np.int64)
+        if vals.size > self.capacity:
+            raise ValueError("checkpointed SpaceSaving exceeds capacity")
+        self.counts = {
+            int(v): float(c) for v, c in zip(vals, np.asarray(state["counts"]))
+        }
+        self.errors = {
+            int(v): float(e) for v, e in zip(vals, np.asarray(state["errors"]))
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,3 +328,36 @@ class StreamHHTracker:
         return {
             a: s.values for a, s in self.snapshot(threshold, max_per_attr).items()
         }
+
+    # ---- checkpoint (DESIGN.md §8) -----------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Flat array tree of every summary — restoring it into a tracker
+        built from the same config resumes estimation bit-for-bit."""
+        out: dict[str, np.ndarray] = {
+            "batches": np.array([self.batches], np.int64)
+        }
+        for (a, rel_name), cms in self._cms.items():
+            for k, v in cms.state_dict().items():
+                out[f"cms/{a}/{rel_name}/{k}"] = v
+        for a, ss in self._ss.items():
+            for k, v in ss.state_dict().items():
+                out[f"ss/{a}/{k}"] = v
+        return out
+
+    def load_state_dict(self, state: dict[str, np.ndarray]) -> None:
+        self.batches = int(np.asarray(state["batches"])[0])
+        for (a, rel_name), cms in self._cms.items():
+            cms.load_state_dict(
+                {
+                    "table": state[f"cms/{a}/{rel_name}/table"],
+                    "scalars": state[f"cms/{a}/{rel_name}/scalars"],
+                }
+            )
+        for a, ss in self._ss.items():
+            ss.load_state_dict(
+                {
+                    "values": state[f"ss/{a}/values"],
+                    "counts": state[f"ss/{a}/counts"],
+                    "errors": state[f"ss/{a}/errors"],
+                }
+            )

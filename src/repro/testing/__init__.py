@@ -1,0 +1,20 @@
+"""Test harnesses: deterministic fault injection for the execution seams."""
+from .faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultReport,
+    FaultSpec,
+    FaultySketchTap,
+    InjectedFault,
+    InjectedPreemption,
+)
+
+__all__ = [
+    "FaultEvent",
+    "FaultInjector",
+    "FaultReport",
+    "FaultSpec",
+    "FaultySketchTap",
+    "InjectedFault",
+    "InjectedPreemption",
+]

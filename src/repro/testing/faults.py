@@ -1,0 +1,270 @@
+"""Deterministic fault injection for the execution seams (DESIGN.md §8).
+
+The robustness claims of the speculative executor and the streaming engine
+are only claims until something actually fails.  This harness injects
+failures *deterministically* — by (shard, attempt) or by ingest batch, not
+by random chance — at the two seams where a real deployment loses work:
+
+  * **Reduce shards** (``mapreduce.straggler.run_with_speculation``): a
+    ``FaultInjector`` wraps each shard attempt.  ``drop`` kills the attempt
+    before any work, ``preempt`` kills it after the work but before the
+    result is reported (compute lost), ``delay`` stalls it into straggler
+    territory, and ``duplicate`` races a second copy of the attempt from
+    the start.  The executor must end every faulted shard in one of two
+    states — a successful retry/backup, or an explicit per-shard error that
+    propagates to the caller — never a silently absorbed loss.  Shard
+    results combine associatively (counts/checksums add mod 2^32), so
+    duplicate completions are idempotent by construction and the harness
+    verifies the final (count, checksum) is fault-invariant.
+  * **Sketch increments** (``FaultySketchTap`` around ``StreamHHTracker``):
+    dropped or duplicated Count-Min/SpaceSaving updates degrade *planning
+    quality only* — the join fingerprint must be bit-identical, because
+    correctness never depends on the sketch.  The tap records every
+    tampered batch so a test can assert both halves of that contract.
+
+Every injected fault is recorded as a ``FaultEvent``; ``resolve()`` maps
+events to shard outcomes and ``assert_all_resolved()`` fails a test if any
+fault vanished without a retry-success or an explicit report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Iterable, Sequence
+
+KINDS = ("drop", "duplicate", "delay", "preempt")
+TARGETS = ("shard", "sketch")
+
+
+class InjectedFault(RuntimeError):
+    """An injected shard failure (worker died before doing the work)."""
+
+
+class InjectedPreemption(InjectedFault):
+    """An injected preemption: the attempt finished its compute but the
+    worker died before reporting — the result is lost, not the input."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault.
+
+    ``target="shard"``: fires on shard ``shard_id``'s attempt number
+    ``attempt`` (1-based; speculative/duplicate submissions count).
+    ``target="sketch"``: fires on the ``batch``-th tapped observe call.
+    """
+
+    kind: str  # drop | duplicate | delay | preempt
+    target: str = "shard"
+    shard_id: int = 0
+    attempt: int = 1
+    batch: int = 0  # sketch faults: which observe() call to tamper
+    delay_s: float = 0.05  # delay faults: how long to stall
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.target not in TARGETS:
+            raise ValueError(f"unknown fault target {self.target!r}")
+        if self.target == "sketch" and self.kind in ("delay", "preempt"):
+            raise ValueError("sketch faults support drop/duplicate only")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One fault actually fired, and how it ended."""
+
+    spec: FaultSpec
+    action: str  # raised | delayed | duplicated | dropped_increment |
+    #              duplicated_increment
+    resolved: bool = False  # retry succeeded, or failure explicitly reported
+    outcome: str = ""  # "result" | "error" once resolved ("" before/never)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """Summary of one injection run (see ``FaultInjector.report``)."""
+
+    injected: int  # events fired
+    retried_ok: int  # shard faults whose shard still produced a result
+    reported: int  # shard faults whose shard ended in an explicit error
+    sketch_tampered: int  # sketch increments dropped/duplicated (quality-only)
+    unresolved: int  # faults with neither outcome — must be 0
+
+
+class FaultInjector:
+    """Deterministic fault schedule + thread-safe event log.
+
+    Pass to ``run_with_speculation`` / ``run_join_speculative`` (shard
+    faults) and/or wrap an engine's tracker in ``FaultySketchTap`` (sketch
+    faults).  After the run, ``resolve(outcomes)`` classifies every event
+    and ``assert_all_resolved()`` enforces the never-silent contract.
+    """
+
+    def __init__(self, faults: Iterable[FaultSpec]):
+        self.faults = tuple(faults)
+        self.events: list[FaultEvent] = []
+        self._lock = threading.Lock()
+
+    def _record(self, spec: FaultSpec, action: str) -> FaultEvent:
+        ev = FaultEvent(spec=spec, action=action)
+        with self._lock:
+            self.events.append(ev)
+        return ev
+
+    # ---- shard seam --------------------------------------------------------
+    def extra_initial_attempts(self, shard_id: int) -> int:
+        """How many duplicate copies of shard ``shard_id`` to race from the
+        start (the ``duplicate`` fault: a retried RPC that was not lost)."""
+        n = 0
+        for s in self.faults:
+            if (
+                s.target == "shard"
+                and s.kind == "duplicate"
+                and s.shard_id == shard_id
+            ):
+                self._record(s, "duplicated")
+                n += 1
+        return n
+
+    def wrap(
+        self, shard_id: int, attempt: int, fn: Callable[[], object]
+    ) -> Callable[[], object]:
+        """Apply the faults scheduled for (shard, attempt) around ``fn``."""
+        specs = [
+            s
+            for s in self.faults
+            if s.target == "shard"
+            and s.shard_id == shard_id
+            and s.attempt == attempt
+            and s.kind in ("drop", "delay", "preempt")
+        ]
+        if not specs:
+            return fn
+
+        def faulted():
+            for s in specs:
+                if s.kind == "delay":
+                    self._record(s, "delayed")
+                    time.sleep(s.delay_s)
+            for s in specs:
+                if s.kind == "drop":
+                    self._record(s, "raised")
+                    raise InjectedFault(
+                        f"shard {shard_id} attempt {attempt}: injected drop"
+                    )
+            result = fn()
+            for s in specs:
+                if s.kind == "preempt":
+                    self._record(s, "raised")
+                    raise InjectedPreemption(
+                        f"shard {shard_id} attempt {attempt}: preempted "
+                        "after compute, result lost"
+                    )
+            return result
+
+        return faulted
+
+    # ---- sketch seam -------------------------------------------------------
+    def sketch_faults(self, call_index: int) -> list[FaultSpec]:
+        return [
+            s
+            for s in self.faults
+            if s.target == "sketch" and s.batch == call_index
+        ]
+
+    # ---- resolution --------------------------------------------------------
+    def resolve(self, outcomes: Sequence) -> None:
+        """Mark each shard event resolved by its shard's final
+        ``ShardOutcome``: a result (retry/backup won) or an explicit
+        ``error`` both count; a missing outcome does not.  Sketch events
+        are quality-only and resolve by having been recorded."""
+        by_id = {o.shard_id: o for o in outcomes}
+        with self._lock:
+            for ev in self.events:
+                if ev.spec.target == "sketch":
+                    ev.resolved = True
+                    continue
+                o = by_id.get(ev.spec.shard_id)
+                if o is None:
+                    ev.resolved, ev.outcome = False, ""
+                elif o.result is not None:
+                    ev.resolved, ev.outcome = True, "result"
+                elif o.error is not None:
+                    ev.resolved, ev.outcome = True, "error"
+                else:
+                    ev.resolved, ev.outcome = False, ""
+
+    def report(self) -> FaultReport:
+        with self._lock:
+            events = list(self.events)
+        retried_ok = reported = sketch = unresolved = 0
+        for ev in events:
+            if ev.spec.target == "sketch":
+                sketch += 1
+            elif ev.outcome == "result":
+                retried_ok += 1
+            elif ev.outcome == "error":
+                reported += 1
+            else:
+                unresolved += 1
+        return FaultReport(
+            injected=len(events),
+            retried_ok=retried_ok,
+            reported=reported,
+            sketch_tampered=sketch,
+            unresolved=unresolved,
+        )
+
+    def assert_all_resolved(self) -> None:
+        """Fail loudly if any injected fault was neither survived by a
+        retry/backup nor surfaced as an explicit shard error."""
+        with self._lock:
+            bad = [ev for ev in self.events if not ev.resolved]
+        if bad:
+            raise AssertionError(
+                f"{len(bad)} injected fault(s) silently absorbed: "
+                + "; ".join(
+                    f"{ev.spec.kind}@shard{ev.spec.shard_id}"
+                    f"/attempt{ev.spec.attempt}"
+                    for ev in bad
+                )
+            )
+
+
+class FaultySketchTap:
+    """Transparent proxy over ``StreamHHTracker`` that drops or duplicates
+    whole-batch sketch increments per the injector's schedule.  Everything
+    else (snapshots, rates, checkpoint state) passes through untouched, so
+    an engine keeps working — with a degraded skew picture.  Tampering is
+    quality-only by design: the engine's join fingerprint must not move."""
+
+    def __init__(self, tracker, injector: FaultInjector):
+        self._tracker = tracker
+        self._injector = injector
+        self._calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self._tracker, name)
+
+    def _apply(self, do_observe: Callable[[], None]) -> None:
+        idx = self._calls
+        self._calls += 1
+        specs = self._injector.sketch_faults(idx)
+        if any(s.kind == "drop" for s in specs):
+            for s in specs:
+                if s.kind == "drop":
+                    self._injector._record(s, "dropped_increment")
+            return  # the whole batch's increments are lost
+        do_observe()
+        for s in specs:
+            if s.kind == "duplicate":
+                self._injector._record(s, "duplicated_increment")
+                do_observe()  # double-counted increments
+
+    def observe(self, batch) -> None:
+        self._apply(lambda: self._tracker.observe(batch))
+
+    def observe_absorbed(self, batch, deltas) -> None:
+        self._apply(lambda: self._tracker.observe_absorbed(batch, deltas))

@@ -3,6 +3,7 @@ from .checkpoint import (
     AsyncCheckpointer,
     latest_step,
     load_checkpoint,
+    load_manifest,
     restore_tree,
     save_checkpoint,
 )
@@ -24,6 +25,7 @@ __all__ = [
     "init_train_state",
     "latest_step",
     "load_checkpoint",
+    "load_manifest",
     "make_train_step",
     "plan_mesh_shape",
     "restore_tree",

@@ -38,7 +38,11 @@ def save_checkpoint(
     step: int,
     tree: Any,
     keep: int = 3,
+    metadata: dict | None = None,
 ) -> str:
+    """``metadata``: optional JSON-able dict stored in the manifest —
+    consumers (e.g. the streaming engine checkpoint, DESIGN.md §8) use it
+    for format versions and non-array scalars that must survive restore."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -53,6 +57,7 @@ def save_checkpoint(
         "shapes": {k: list(v.shape) for k, v in flat.items()},
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "time": time.time(),
+        "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -98,6 +103,17 @@ def load_checkpoint(directory: str, step: int | None = None) -> tuple[int, dict[
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
     return step, flat
+
+
+def load_manifest(directory: str, step: int | None = None) -> dict:
+    """The manifest (incl. ``metadata``) of one checkpoint step."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore_tree(template: Any, flat: dict[str, np.ndarray], shardings: Any = None) -> Any:

@@ -1,0 +1,217 @@
+"""Fault-injection tests (DESIGN.md §8): every injected fault ends in a
+retry-success or an explicit report — never a silent loss — and the join
+fingerprint is fault-invariant wherever a result is produced at all.
+
+Seams exercised (``repro.testing.faults``):
+  * reduce shards under ``run_join_speculative`` — drop / duplicate /
+    delay / preempt, per (shard, attempt), retried by the straggler runner;
+  * sketch increments via ``FaultySketchTap`` — quality-only by contract:
+    the engine's fingerprint must not move.
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan_shares_skew, two_way
+from repro.data import paper_2way
+from repro.mapreduce import oracle_join, run_join
+from repro.mapreduce.executor import run_join_speculative
+from repro.mapreduce.straggler import run_with_speculation
+from repro.stream import StreamConfig, StreamingJoinEngine
+from repro.testing import (
+    FaultInjector,
+    FaultSpec,
+    FaultySketchTap,
+    InjectedFault,
+)
+
+pytestmark = pytest.mark.faults
+
+
+@pytest.fixture(scope="module")
+def sharded_case():
+    """A 2-way join with THREE pinned heavy hitters: the plan has >= 4
+    residual joins, so the speculative executor genuinely runs >= 3 shards
+    (a single-residual plan would make per-shard faults vacuous)."""
+    rng = np.random.default_rng(0)
+    n, domain = 3000, 2000
+    heavy = np.concatenate([np.full(600, 5), np.full(500, 17), np.full(400, 42)])
+    b_r = np.concatenate([heavy, rng.integers(0, domain, n - heavy.size)])
+    r = np.stack([rng.integers(0, domain, n), b_r], 1).astype(np.int64)
+    b_s = np.concatenate(
+        [np.full(120, 5), np.full(100, 17), np.full(80, 42),
+         rng.integers(0, domain, 300)]
+    )
+    s = np.stack([b_s, rng.integers(0, domain, 600)], 1).astype(np.int64)
+    data = {"R": r, "S": s}
+    plan = plan_shares_skew(two_way(), data, q=150)
+    assert len(plan.residuals) >= 3, "fault targets must map to real shards"
+    base = run_join(two_way(), data, plan, cap_factor=4.0)
+    return data, plan, base
+
+
+def _speculative(data, plan, injector, **kw):
+    kw.setdefault("cap_factor", 4.0)
+    kw.setdefault("n_shards", 3)
+    return run_join_speculative(two_way(), data, plan, injector=injector, **kw)
+
+
+# ------------------------------------------------------------ shard faults
+def test_dropped_shard_is_retried(sharded_case):
+    data, plan, base = sharded_case
+    inj = FaultInjector([FaultSpec(kind="drop", shard_id=0, attempt=1)])
+    res = _speculative(data, plan, inj)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    assert res.comm_tuples == base.comm_tuples
+    inj.assert_all_resolved()
+    rep = inj.report()
+    assert rep.injected >= 1 and rep.retried_ok >= 1 and rep.unresolved == 0
+
+
+def test_preempted_shard_is_retried(sharded_case):
+    """Preemption loses the computed result, not the input: the retry must
+    reproduce it exactly (shards are deterministic pure functions)."""
+    data, plan, base = sharded_case
+    inj = FaultInjector([FaultSpec(kind="preempt", shard_id=1, attempt=1)])
+    res = _speculative(data, plan, inj)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    inj.assert_all_resolved()
+
+
+def test_duplicate_shard_is_idempotent(sharded_case):
+    """A raced duplicate submission must not double-count: the first result
+    wins and counts/checksums are unchanged."""
+    data, plan, base = sharded_case
+    inj = FaultInjector([FaultSpec(kind="duplicate", shard_id=2)])
+    res = _speculative(data, plan, inj)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    assert res.comm_tuples == base.comm_tuples
+    inj.assert_all_resolved()
+
+
+def test_delayed_shard_still_exact(sharded_case):
+    """A stalled attempt either finishes or is raced by a speculative
+    backup; both orders end in the exact result."""
+    data, plan, base = sharded_case
+    inj = FaultInjector(
+        [FaultSpec(kind="delay", shard_id=0, attempt=1, delay_s=0.4)]
+    )
+    res = _speculative(data, plan, inj, speculate_after=2.0)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    inj.assert_all_resolved()
+
+
+def test_every_fault_class_together(sharded_case):
+    """All four fault classes in one run still converge to the exact
+    result, with every event accounted for."""
+    data, plan, base = sharded_case
+    inj = FaultInjector(
+        [
+            FaultSpec(kind="drop", shard_id=0, attempt=1),
+            FaultSpec(kind="preempt", shard_id=1, attempt=1),
+            FaultSpec(kind="duplicate", shard_id=2),
+            FaultSpec(kind="delay", shard_id=2, attempt=1, delay_s=0.2),
+        ]
+    )
+    res = _speculative(data, plan, inj)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    inj.assert_all_resolved()
+    assert inj.report().unresolved == 0
+
+
+def test_exhausted_attempts_reported_loudly(sharded_case):
+    """A shard that fails every attempt must surface as an explicit error
+    carrying the shard id — a partial join is never returned."""
+    data, plan, _ = sharded_case
+    inj = FaultInjector(
+        [FaultSpec(kind="drop", shard_id=1, attempt=a) for a in (1, 2, 3)]
+    )
+    with pytest.raises(RuntimeError, match="shard 1"):
+        _speculative(data, plan, inj, max_attempts=3)
+    inj.assert_all_resolved()  # explicit report counts as resolved
+    rep = inj.report()
+    assert rep.reported >= 1 and rep.unresolved == 0
+
+
+def test_straggler_runner_outcome_fields():
+    """Unit-level: the runner retries failing attempts and marks terminal
+    failures on the outcome instead of raising mid-run."""
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise InjectedFault("first attempt dies")
+        return 42
+
+    def doomed():
+        raise InjectedFault("always dies")
+
+    outcomes = run_with_speculation([flaky, doomed], max_attempts=2)
+    assert outcomes[0].result == 42
+    assert outcomes[0].attempts == 2 and outcomes[0].error is None
+    assert outcomes[1].result is None
+    assert outcomes[1].attempts == 2
+    assert "always dies" in outcomes[1].error
+
+
+# ------------------------------------------------------------ sketch faults
+def test_sketch_faults_are_quality_only():
+    """Dropped/duplicated sketch increments may degrade planning but must
+    not move the join fingerprint: correctness never depends on the
+    sketch."""
+    rng_a, rng_b = np.random.default_rng(11), np.random.default_rng(11)
+    cfg = StreamConfig(q=60, decay=0.5, load_factor=2.0)
+    clean = StreamingJoinEngine(two_way(), cfg)
+    faulty = StreamingJoinEngine(two_way(), cfg)
+    inj = FaultInjector(
+        [
+            FaultSpec(kind="drop", target="sketch", batch=1),
+            FaultSpec(kind="duplicate", target="sketch", batch=2),
+        ]
+    )
+    faulty.tracker = FaultySketchTap(faulty.tracker, inj)
+
+    def batch(rng):
+        data = paper_2way(rng, n_r=400, n_s=120, domain=500)
+        return {"R": data["R"], "S": data["S"]}
+
+    for _ in range(4):
+        clean.ingest(batch(rng_a))
+        faulty.ingest(batch(rng_b))
+    assert (faulty.total_count, faulty.total_checksum) == (
+        clean.total_count, clean.total_checksum,
+    )
+    count, checksum, _, _ = oracle_join(two_way(), faulty.history_data())
+    assert (faulty.total_count, faulty.total_checksum) == (count, checksum)
+    inj.resolve([])
+    inj.assert_all_resolved()
+    assert inj.report().sketch_tampered == 2
+
+
+# ----------------------------------------------- engine preempt-mid-stream
+def test_engine_preempt_mid_batch_checkpoint_resume(tmp_path):
+    """The engine-level preemption story: checkpoint, die between batches,
+    restore, and converge to the same cumulative fingerprint as an
+    uninterrupted run (the streaming analogue of a preempted shard)."""
+    cfg = StreamConfig(q=60, decay=0.5, load_factor=2.0)
+    rng_ref = np.random.default_rng(12)
+    ref = StreamingJoinEngine(two_way(), cfg)
+    batches = [
+        paper_2way(rng_ref, n_r=300, n_s=100, domain=400) for _ in range(6)
+    ]
+    for b in batches:
+        ref.ingest(b)
+
+    eng = StreamingJoinEngine(two_way(), cfg)
+    for b in batches[:3]:
+        eng.ingest(b)
+    eng.save_checkpoint(str(tmp_path))
+    del eng  # preempted
+
+    resumed = StreamingJoinEngine.restore(str(tmp_path), two_way(), cfg)
+    for b in batches[3:]:
+        resumed.ingest(b)
+    assert resumed.reports == ref.reports
+    assert (resumed.total_count, resumed.total_checksum) == (
+        ref.total_count, ref.total_checksum,
+    )

@@ -1,0 +1,286 @@
+"""Bounded-state streaming tests (DESIGN.md §8): windowed retention,
+admission control, checkpoint/restore, and replan-thrash hysteresis.
+
+The load-bearing invariants:
+  * with retention, the engine's (window_count, window_checksum) equals the
+    batch oracle on the retained suffix after ANY prefix of batches —
+    retraction is exact, not approximate;
+  * peak carried state is flat under retention where the unbounded engine
+    grows monotonically (the soak);
+  * admission accounting is exact: offered == ingested + backlog + shed;
+  * checkpoint -> kill -> restore -> continue produces bit-identical
+    reports and fingerprints to an uninterrupted run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import two_way
+from repro.mapreduce import oracle_join
+from repro.stream import (
+    AdmissionPolicy,
+    RetentionPolicy,
+    StreamConfig,
+    StreamingJoinEngine,
+)
+
+
+def _zipf_batch(rng, shift, n_r=240, n_s=80, domain=600, a=1.6):
+    """Small 2-way batch; Zipf-heavy B values sit at ``shift`` (mod domain)."""
+    b_r = ((rng.zipf(a, n_r) - 1) + shift) % domain
+    b_s = ((rng.zipf(a, n_s) - 1) + shift) % domain
+    r = np.stack([rng.integers(0, domain, n_r), b_r], 1).astype(np.int64)
+    s = np.stack([b_s, rng.integers(0, domain, n_s)], 1).astype(np.int64)
+    return {"R": r, "S": s}
+
+
+class FakeClock:
+    """Deterministic injectable clock for TTL retention."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ------------------------------------------------------- windowed retention
+def test_window_fingerprint_matches_oracle_every_batch():
+    """After every batch, (window_count, window_checksum) == the batch
+    oracle on the retained suffix — retraction telescopes exactly."""
+    rng = np.random.default_rng(0)
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0,
+        retention=RetentionPolicy(window_batches=3),
+    )
+    eng = StreamingJoinEngine(two_way(), cfg)
+    for i in range(10):
+        shift = 0 if i < 5 else 300
+        report = eng.ingest(_zipf_batch(rng, shift))
+        count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+        assert (eng.window_count, eng.window_checksum) == (count, checksum)
+        assert len(eng._retained_ids) <= 3
+        assert report.window_count == eng.window_count
+    assert eng.expired_batches == 7
+    assert eng.total_retracted > 0
+    # cumulative fingerprint only ever grows (expiry never un-emits)
+    totals = [r.total_count for r in eng.reports]
+    assert totals == sorted(totals)
+
+
+def test_window_fingerprint_matches_oracle_fused():
+    """Same invariant on the fused sorted-merge path (batch-id expiry in
+    the SortedDeltaIndex), including across a drift replan."""
+    rng = np.random.default_rng(1)
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0, fused_ingest=True,
+        retention=RetentionPolicy(window_batches=4),
+    )
+    eng = StreamingJoinEngine(two_way(), cfg)
+    for i in range(12):
+        shift = 0 if i < 6 else 300
+        eng.ingest(_zipf_batch(rng, shift))
+    assert eng.fused_batches == 12
+    assert eng.expired_batches == 8
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+    assert eng.replan_count >= 1  # drift fired while the window slid
+
+
+def test_ttl_retention_with_injectable_clock():
+    clock = FakeClock()
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0,
+        retention=RetentionPolicy(ttl_seconds=10.0),
+    )
+    eng = StreamingJoinEngine(two_way(), cfg, clock=clock)
+    rng = np.random.default_rng(2)
+    for _ in range(8):
+        clock.t += 4.0  # each batch ages the window by 4s -> keep last ~3
+        eng.ingest(_zipf_batch(rng, 0))
+    assert eng.expired_batches > 0
+    assert len(eng._retained_ids) <= 3
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+
+
+def test_recompute_refuses_after_expiry():
+    """The distributed cross-check must not silently compare a truncated
+    replay against the full-stream fingerprint."""
+    rng = np.random.default_rng(3)
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0,
+        retention=RetentionPolicy(window_batches=2),
+    )
+    eng = StreamingJoinEngine(two_way(), cfg)
+    for _ in range(5):
+        eng.ingest(_zipf_batch(rng, 0))
+    with pytest.raises(RuntimeError, match="window=True"):
+        eng.recompute_distributed()
+    res = eng.recompute_distributed(window=True, cap_factor=8.0,
+                                    route_cap_factor=8.0)
+    assert (res.count, res.checksum) == (eng.window_count, eng.window_checksum)
+
+
+@pytest.mark.soak
+def test_soak_carried_state_flat_under_retention():
+    """>= 200 drifting-Zipf batches: peak per-reducer carried state stays
+    flat with retention where the unbounded engine grows monotonically."""
+    n_batches = 200
+    base_kw = dict(q=60, decay=0.5, load_factor=2.0, fused_ingest=True)
+    bounded = StreamingJoinEngine(
+        two_way(),
+        StreamConfig(retention=RetentionPolicy(window_batches=5), **base_kw),
+    )
+    unbounded = StreamingJoinEngine(two_way(), StreamConfig(**base_kw))
+    rng_b, rng_u = np.random.default_rng(4), np.random.default_rng(4)
+    carried_b, carried_u = [], []
+    for i in range(n_batches):
+        shift = (i // 50) * 150  # drift every 50 batches
+        rb = bounded.ingest(_zipf_batch(rng_b, shift, n_r=120, n_s=40))
+        ru = unbounded.ingest(_zipf_batch(rng_u, shift, n_r=120, n_s=40))
+        carried_b.append(rb.carried_tuples)
+        carried_u.append(ru.carried_tuples)
+    # unbounded: monotonic growth, ends at the whole stream's emissions
+    assert carried_u[-1] == max(carried_u)
+    assert carried_u[-1] > 10 * max(carried_b)
+    # bounded: flat — the second-half peak stays within 1.5x the peak seen
+    # once the window first filled (replans may widen per-tuple replication,
+    # but there is no growth with stream length)
+    assert max(carried_b[n_batches // 2 :]) <= 1.5 * max(carried_b[5:50])
+    assert bounded.expired_batches == n_batches - 5
+    # exactness survived 200 retractions + replans: window == oracle
+    count, checksum, _, _ = oracle_join(two_way(), bounded.history_data())
+    assert (bounded.window_count, bounded.window_checksum) == (count, checksum)
+
+
+# ----------------------------------------------------------- admission
+def test_admission_exact_accounting_and_drain():
+    """offered == ingested + backlog + shed, exactly; after the inflow
+    stops, the backlog drains and the fingerprint equals the oracle on
+    everything admitted."""
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0,
+        admission=AdmissionPolicy(headroom=1.0, max_backlog_rows=400),
+    )
+    eng = StreamingJoinEngine(two_way(), cfg)
+    rng = np.random.default_rng(5)
+    offered = {"R": 0, "S": 0}
+    for _ in range(4):  # oversized batches: force deferral (and shedding)
+        batch = _zipf_batch(rng, 0, n_r=2000, n_s=700)
+        offered["R"] += len(batch["R"])
+        offered["S"] += len(batch["S"])
+        report = eng.ingest(batch)
+    assert report.deferred["R"] > 0  # backlog is non-empty mid-stream
+    assert eng.total_shed > 0  # overflow was shed, explicitly
+    empty = {"R": np.zeros((0, 2), np.int64), "S": np.zeros((0, 2), np.int64)}
+    for _ in range(40):  # drain
+        report = eng.ingest(empty)
+        if report.total_count and not any(report.deferred.values()):
+            break
+    assert not any(report.deferred.values()), "backlog failed to drain"
+    for nm in ("R", "S"):
+        ingested = sum(len(b) for b in eng._history[nm])
+        backlog = len(eng._controller.backlog[nm])
+        shed = sum(r.shed[nm] for r in eng.reports)
+        assert ingested + backlog + shed == offered[nm]
+        assert backlog == 0
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert (eng.total_count, eng.total_checksum) == (count, checksum)
+
+
+def test_admission_off_admits_everything():
+    rng = np.random.default_rng(6)
+    eng = StreamingJoinEngine(
+        two_way(), StreamConfig(q=60, decay=0.5, load_factor=2.0)
+    )
+    batch = _zipf_batch(rng, 0, n_r=5000, n_s=1500)
+    report = eng.ingest(batch)
+    assert not any(report.deferred.values())
+    assert not any(report.shed.values())
+    assert len(eng._history["R"][0]) == 5000
+
+
+# ---------------------------------------------------- checkpoint / restore
+def _ingest_n(eng, rng, n, start=0):
+    reports = []
+    for i in range(start, start + n):
+        shift = 0 if i < 4 else 300  # drift lands after the checkpoint
+        reports.append(eng.ingest(_zipf_batch(rng, shift)))
+    return reports
+
+
+@pytest.mark.faults
+@pytest.mark.parametrize("fused", [False, True])
+def test_checkpoint_restore_bit_identical(tmp_path, fused):
+    """save -> kill -> restore -> continue reproduces the uninterrupted
+    run's reports and fingerprints bit-for-bit, including the post-restore
+    drift replan decision."""
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0, fused_ingest=fused,
+        retention=RetentionPolicy(window_batches=4),
+        admission=AdmissionPolicy(headroom=4.0),
+    )
+    # uninterrupted reference
+    ref = StreamingJoinEngine(two_way(), cfg)
+    _ingest_n(ref, np.random.default_rng(7), 8)
+
+    # interrupted twin: same batches, killed after batch 3
+    eng = StreamingJoinEngine(two_way(), cfg)
+    rng = np.random.default_rng(7)
+    _ingest_n(eng, rng, 3)
+    eng.save_checkpoint(str(tmp_path))
+    del eng  # the "kill"
+
+    resumed = StreamingJoinEngine.restore(str(tmp_path), two_way(), cfg)
+    assert len(resumed.reports) == 3
+    _ingest_n(resumed, rng, 5, start=3)
+
+    assert resumed.reports == ref.reports  # bit-identical telemetry
+    assert (resumed.total_count, resumed.total_checksum) == (
+        ref.total_count, ref.total_checksum,
+    )
+    assert (resumed.window_count, resumed.window_checksum) == (
+        ref.window_count, ref.window_checksum,
+    )
+    assert resumed.replan_count == ref.replan_count
+    np.testing.assert_array_equal(resumed._loads, ref._loads)
+
+
+@pytest.mark.faults
+def test_restore_rejects_wrong_kind(tmp_path):
+    from repro.train.checkpoint import save_checkpoint
+
+    save_checkpoint(str(tmp_path), step=0, tree={"x": np.zeros(3)})
+    with pytest.raises(ValueError, match="not a stream engine"):
+        StreamingJoinEngine.restore(
+            str(tmp_path), two_way(),
+            StreamConfig(q=60, decay=0.5, load_factor=2.0),
+        )
+
+
+# ------------------------------------------------------------- hysteresis
+def test_drift_hysteresis_no_replan_thrash():
+    """A heavy value whose rate oscillates inside the (fade_factor*q, pin)
+    hysteresis gap must not replan every batch: once pinned it stays
+    pinned (load is spread), and its rate never sinks below the fade
+    threshold, so the replan count stays bounded."""
+    q = 60.0
+    cfg = StreamConfig(q=q, decay=0.5, load_factor=2.0, fade_factor=0.25)
+    eng = StreamingJoinEngine(two_way(), cfg)
+    rng = np.random.default_rng(8)
+    hot = 7
+    for i in range(16):
+        # oscillate the hot value's per-batch rate between ~0.6q and ~1.5q:
+        # above fade_factor*q always, crossing the pin threshold (~q) often
+        n_hot = int(1.5 * q) if i % 2 == 0 else int(0.6 * q)
+        b_r = np.full(n_hot, hot)
+        r = np.stack([rng.integers(0, 600, n_hot), b_r], 1).astype(np.int64)
+        s_vals = np.concatenate([[hot] * 5, rng.integers(0, 600, 75)])
+        s = np.stack([s_vals, rng.integers(0, 600, 80)], 1).astype(np.int64)
+        eng.ingest({"R": r, "S": s})
+    assert eng.replan_count <= 2, (
+        f"replan thrash: {eng.replan_count} replans in 16 batches; "
+        f"reasons={[r.drift_reason for r in eng.reports if r.replanned]}"
+    )
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert (eng.total_count, eng.total_checksum) == (count, checksum)
