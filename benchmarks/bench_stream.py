@@ -22,7 +22,13 @@ Tracked:
     under windowed retention + admission accounting — peak carried state
     must drop below the unbounded engine's, the window fingerprint must
     equal the oracle on the retained suffix, and the retention/shed
-    counters land in the ``bounded`` sub-record.
+    counters land in the ``bounded`` sub-record;
+  * reducer-loss recovery (DESIGN.md §5): a fourth engine runs with the
+    host model on and one host killed mid-run by the fault injector —
+    recovery must complete at the kill boundary itself (no checkpoint
+    restore), replay no more than the lost reducers' retained-window
+    share, and verify the window fingerprint; the ``recovery`` sub-record
+    tracks the boundary wall time and replay volume.
 
 ``BENCH_stream.json`` (all fields documented in BENCHMARKS.md) records the
 trajectory run over run.  The fused engine counts its kernel passes; this
@@ -43,10 +49,12 @@ from repro.mapreduce import oracle_join, predicted_comm
 from repro.mapreduce.keys import static_route_table
 from repro.stream import (
     AdmissionPolicy,
+    RecoveryPolicy,
     RetentionPolicy,
     StreamConfig,
     StreamingJoinEngine,
 )
+from repro.testing import FaultInjector, FaultSpec
 
 from .common import emit
 
@@ -150,6 +158,41 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
         "retention failed to bound carried state"
     )
 
+    # ---- reducer-loss recovery (DESIGN.md §5) ------------------------------
+    # same batches again with the host model on and a host killed mid-run:
+    # recovery must run at the batch boundary (no checkpoint restore),
+    # replay exactly the lost reducers' retained-window share, and keep
+    # the window fingerprint exact
+    kill_batch = shift_at + 1
+    inj = FaultInjector(
+        [FaultSpec(kind="host_loss", target="host", host_id=2,
+                   batch=kill_batch)]
+    )
+    rec_eng = StreamingJoinEngine(
+        query,
+        StreamConfig(
+            q=120, decay=0.5, load_factor=2.0,
+            retention=RetentionPolicy(window_batches=3),
+            recovery=RecoveryPolicy(n_hosts=8),
+        ),
+    )
+    rec_eng.arm_faults(inj)
+    recovery_us = 0.0
+    for i, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        rec_eng.ingest(batch)
+        if i == kill_batch:  # the boundary that detected + recovered
+            recovery_us = (time.perf_counter() - t0) * 1e6
+    inj.assert_all_resolved()
+    assert len(rec_eng.recoveries) == 1, "host loss was not recovered"
+    rec = rec_eng.recoveries[0]
+    assert rec.verified, "recovered state failed fingerprint verification"
+    assert rec.replayed_tuples <= rec.lost_share_tuples
+    r_count, r_checksum, _, _ = oracle_join(query, rec_eng.history_data())
+    assert (rec_eng.window_count, rec_eng.window_checksum) == (
+        r_count, r_checksum,
+    ), "post-recovery window fingerprint != oracle"
+
     # modeled roofline of the fused pass under the final plan (R relation)
     rel = query.relations[0]
     profile = overlap_profile(
@@ -179,6 +222,9 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
     emit("stream_bounded_shed", bounded.total_shed,
          f"deferred={bounded.total_deferred};"
          f"retracted={bounded.total_retracted}")
+    emit("stream_recovery_wall", recovery_us,
+         f"mode={rec.mode};replayed={rec.replayed_tuples};"
+         f"lost_reducers={rec.lost_reducers};verified={rec.verified}")
     for i, (bu, fu) in enumerate(zip(base_us, fused_us)):
         replanned = base.reports[i].replanned
         print(f"# batch {i}: baseline {bu / 1e3:8.1f} ms  "
@@ -229,6 +275,21 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
                 "shed_rows": bounded.total_shed,
                 "window_count": bounded.window_count,
                 "window_fingerprint_verified": True,  # asserted above
+            },
+            "recovery": {
+                "n_hosts": rec_eng.config.recovery.n_hosts,
+                "kill_batch": kill_batch,
+                "mode": rec.mode,
+                "lost_hosts": list(rec.lost_hosts),
+                "lost_reducers": rec.lost_reducers,
+                "batches_to_recover": 1,  # detected + repaired at the
+                #                           kill boundary itself
+                "batches_replayed": rec.batches_replayed,
+                "replayed_tuples": rec.replayed_tuples,
+                "lost_share_tuples": rec.lost_share_tuples,
+                "recovery_boundary_us": recovery_us,
+                "survivors": rec.survivors,
+                "fingerprint_verified": rec.verified,  # also asserted above
             },
             "total_count": base.total_count,
             "replan_reasons": [

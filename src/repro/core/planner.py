@@ -24,7 +24,12 @@ from .residual import (
     relevant_sizes,
 )
 from .schema import JoinQuery
-from .shares import SharesSolution, solve_k_for_capacity, solve_shares
+from .shares import (
+    SharesSolution,
+    reproject_solution,
+    solve_k_for_capacity,
+    solve_shares,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +191,59 @@ def plan_with_hh(
         residuals.append(rp)
         offset += rp.num_reducers
     return SharesSkewPlan(query, q, hh, tuple(residuals))
+
+
+def repair_plan(plan: SharesSkewPlan, k_max: int) -> SharesSkewPlan:
+    """Re-project an incumbent plan onto a smaller reducer budget — the
+    degraded-mode half of reducer-loss recovery (DESIGN.md §5).
+
+    A replan-from-scratch (``plan_with_hh``) after host loss would re-detect
+    HHs and re-enumerate combinations, moving HH values between residuals —
+    and every moved combination drags its carried reducer state across the
+    cluster.  Repair instead keeps the HH set and the combination list
+    *identical* (zero HH-combination movement) and only shrinks each
+    residual's grid: budgets scale proportionally (``k_i' = k_i * k_max /
+    K``, floors summing <= k_max), and each residual's shares are
+    re-projected onto its new budget via the closed-form scaling fast path
+    (``reproject_solution`` — exact for the paper's structured joins, the
+    minimum-movement feasible projection otherwise; no SLSQP on the
+    recovery path).  Reducer-id blocks are re-packed contiguously.
+
+    Raises ``ValueError`` when ``k_max`` cannot host one reducer per
+    residual — the caller (the engine) surfaces that as recovery
+    exhaustion, an explicit error rather than a silently dropped residual.
+    """
+    n_res = len(plan.residuals)
+    if k_max < n_res:
+        raise ValueError(
+            f"cannot repair plan: budget {k_max} < {n_res} residuals "
+            "(every combination needs at least one reducer)"
+        )
+    k_old = plan.total_reducers
+    if k_max >= k_old:
+        return plan
+    budgets = [
+        max(1, (r.num_reducers * k_max) // k_old) for r in plan.residuals
+    ]
+    # the max(1, .) floors can overshoot k_max when many residuals round up
+    # from zero; shave the largest budgets until the total fits
+    while sum(budgets) > k_max:
+        i = max(range(n_res), key=budgets.__getitem__)
+        if budgets[i] <= 1:  # pragma: no cover - guarded by k_max >= n_res
+            raise ValueError("cannot repair plan: budget exhausted")
+        budgets[i] -= 1
+    residuals: list[ResidualPlan] = []
+    offset = 0
+    for r, k_i in zip(plan.residuals, budgets):
+        sol = reproject_solution(r.solution, float(k_i))
+        if sol.num_reducers > k_i:  # pragma: no cover - rounding guarantees <=
+            sol = solve_shares(
+                plan.query, r.sizes, k_i, frozenset(r.combo.pinned)
+            )
+        rp = ResidualPlan(r.combo, r.sizes, k_i, sol, offset)
+        residuals.append(rp)
+        offset += rp.num_reducers
+    return SharesSkewPlan(plan.query, plan.q, plan.hh_values, tuple(residuals))
 
 
 def plan_plain_shares(

@@ -170,6 +170,54 @@ def solve_shares(
     )
 
 
+def reproject_solution(sol: SharesSolution, k_new: float) -> SharesSolution:
+    """Re-project an incumbent share assignment onto a new reducer budget
+    without re-running the solver (the plan-repair fast path, DESIGN.md §5).
+
+    In log-space the GP constraint is sum(y) = log k, so shrinking the
+    budget slides the optimum along the constraint normal: every active
+    share scales by the same factor ``(k'/k)^(1/m)`` (m = #share attrs).
+    For the paper's structured joins (2-way, symmetric, triangle) the
+    closed forms in ``closed_forms.py`` are exact power laws in k, so this
+    scaling IS the new optimum; for general residuals it is the
+    minimum-movement feasible projection of the incumbent — which is what
+    plan repair wants: the repaired grid stays recognizably the old grid,
+    so reducer-state migration is minimized.  A share the scaling would
+    push below the x >= 1 boundary is clamped there and its budget
+    redistributed over the still-free shares (water-filling), so the
+    projected product never exceeds k'.
+    """
+    if k_new < 1:
+        raise ValueError(f"k must be >= 1, got {k_new}")
+    expr = sol.cost_expr
+    attrs = expr.share_attrs
+    if not attrs or k_new >= sol.k:
+        return sol if k_new == sol.k else dataclasses.replace(sol, k=float(k_new))
+    cont = {a: 1.0 for a in attrs}
+    free = {a: sol.shares[a] for a in attrs if sol.shares[a] > 1.0}
+    while free:
+        f = min(1.0, (k_new / math.prod(free.values())) ** (1.0 / len(free)))
+        scaled = {a: v * f for a, v in free.items()}
+        clamped = [a for a, v in scaled.items() if v < 1.0]
+        if not clamped:
+            cont.update(scaled)
+            break
+        for a in clamped:  # pinned at the boundary; contributes 1 to prod
+            free.pop(a)
+    ints = _round_shares(expr, cont, float(k_new))
+    all_attrs = expr.query.attributes
+    shares = {a: cont.get(a, 1.0) for a in all_attrs}
+    int_shares = {a: ints.get(a, 1) for a in all_attrs}
+    return SharesSolution(
+        cost_expr=expr,
+        k=float(k_new),
+        shares=shares,
+        int_shares=int_shares,
+        cost=expr.evaluate(shares),
+        int_cost=expr.evaluate({a: float(v) for a, v in int_shares.items()}),
+    )
+
+
 def solve_k_for_capacity(
     query: JoinQuery,
     sizes: Mapping[str, float],

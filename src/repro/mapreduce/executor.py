@@ -168,6 +168,8 @@ def run_join_speculative(
     speculate_after: float = 3.0,
     max_attempts: int = 3,
     injector=None,
+    deadline_s: float | None = None,
+    checksum_results: bool = True,
 ) -> JoinResult:
     """run_join with the reduce phase over-decomposed into reducer shards
     executed under speculative re-execution (straggler mitigation,
@@ -178,7 +180,14 @@ def run_join_speculative(
     Shard failures are retried up to ``max_attempts`` submissions; a shard
     that still fails raises here with its error — a partial join result is
     never returned silently.  ``injector`` (``repro.testing.faults``)
-    deterministically faults chosen attempts to exercise those paths."""
+    deterministically faults chosen attempts to exercise those paths.
+
+    ``deadline_s`` arms the shard-level failure detector: an attempt silent
+    past the deadline is declared failed and re-issued (DESIGN.md §5
+    detection).  ``checksum_results`` (on by default) seals every shard
+    result in a worker-side CRC32 envelope verified on receipt, so a
+    corrupted result (``corrupt_result`` fault, or a real in-transit flip)
+    becomes a retried attempt — never a wrong join answer."""
     from .straggler import run_with_speculation
 
     residuals = plan.residuals
@@ -210,6 +219,8 @@ def run_join_speculative(
         speculate_after=speculate_after,
         max_attempts=max_attempts,
         injector=injector,
+        deadline_s=deadline_s,
+        checksum_results=checksum_results,
     )
     if injector is not None:
         injector.resolve(outcomes)

@@ -12,6 +12,9 @@ replanning (DESIGN.md §6; fused ingest hot path: §7; bounded state: §8).
     window-fingerprint retraction
   * ``admission`` — backpressure: budgeted admission, FIFO backlog,
     explicit shedding with exact counters
+  * ``recovery``  — reducer-loss recovery: host placement + heartbeat
+    detection, lineage replay of lost reducer state, plan repair onto
+    survivors, elastic degraded mode (DESIGN.md §5)
 """
 from .admission import (
     AdmissionController,
@@ -21,7 +24,20 @@ from .admission import (
 )
 from .drift import DriftDecision, DriftMonitor, plan_comm_on_batch, predicted_loads
 from .engine import BatchReport, StreamConfig, StreamingJoinEngine
-from .retention import RetentionPolicy, carried_tuples, remove_prefix
+from .recovery import (
+    HostTracker,
+    RecoveryExhaustedError,
+    RecoveryPolicy,
+    RecoveryReport,
+)
+from .retention import (
+    RetentionPolicy,
+    carried_tuples,
+    lost_occupancy,
+    remove_prefix,
+    select_reducers,
+    zero_reducers,
+)
 from .sketch import DecayingCountMin, HHSnapshot, SpaceSaving, StreamHHTracker
 
 __all__ = [
@@ -33,14 +49,21 @@ __all__ = [
     "DriftDecision",
     "DriftMonitor",
     "HHSnapshot",
+    "HostTracker",
+    "RecoveryExhaustedError",
+    "RecoveryPolicy",
+    "RecoveryReport",
     "RetentionPolicy",
     "SpaceSaving",
     "StreamConfig",
     "StreamingJoinEngine",
     "StreamHHTracker",
     "carried_tuples",
+    "lost_occupancy",
     "plan_comm_on_batch",
     "predicted_loads",
     "remove_prefix",
     "replication_width",
+    "select_reducers",
+    "zero_reducers",
 ]

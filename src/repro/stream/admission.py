@@ -102,6 +102,18 @@ class AdmissionController:
         }
         self.total_deferred = 0  # rows that waited at least one batch
         self.total_shed = 0
+        # degraded-mode tightening (DESIGN.md §5): after reducer loss the
+        # engine sets this to surviving/provisioned host capacity, so
+        # budgets shrink proportionally with the cluster — beyond the K/W
+        # shrink the repaired plan already causes
+        self.capacity_factor = 1.0
+
+    def set_capacity(self, factor: float) -> None:
+        """Clamp admission to ``factor`` x the healthy-cluster budget
+        (0 < factor <= 1; 1.0 restores full capacity)."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"capacity factor must be in (0, 1], got {factor}")
+        self.capacity_factor = float(factor)
 
     # ---- budget ------------------------------------------------------------
     def budgets(
@@ -121,6 +133,7 @@ class AdmissionController:
             w = replication_width(plan, rel.name)
             budget = self.policy.headroom * self.q * k / w
             budget /= max(1.0, float(concentration))
+            budget *= self.capacity_factor
             out[rel.name] = max(self.policy.min_admit, int(budget))
         return out
 
@@ -166,6 +179,7 @@ class AdmissionController:
         out["totals"] = np.array(
             [self.total_deferred, self.total_shed], dtype=np.int64
         )
+        out["capacity"] = np.array([self.capacity_factor], dtype=np.float64)
         return out
 
     def load_state_dict(self, state: Mapping[str, np.ndarray]) -> None:
@@ -174,3 +188,5 @@ class AdmissionController:
         totals = np.asarray(state["totals"])
         self.total_deferred = int(totals[0])
         self.total_shed = int(totals[1])
+        if "capacity" in state:  # absent in pre-recovery checkpoints
+            self.capacity_factor = float(np.asarray(state["capacity"])[0])

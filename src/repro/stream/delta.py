@@ -123,6 +123,25 @@ class SortedDeltaIndex:
             self._batch_by_rel[name], pos, np.int64(batch_id)
         )
 
+    def drop_reducers(self, name: str, reducer_ids: np.ndarray) -> int:
+        """Remove every entry destined for the given reducers — the index
+        half of simulated reducer loss (DESIGN.md §5).  The composite key
+        carries the destination in its high 32 bits, so lost entries are a
+        boolean-mask compaction, exactly like ``expire``; lineage replay
+        re-appends the survivors' share batch-by-batch afterwards.
+        Returns the number removed."""
+        reducer_ids = np.asarray(reducer_ids, dtype=np.int64)
+        keys = self._keys_by_rel[name]
+        if keys.size == 0 or reducer_ids.size == 0:
+            return 0
+        keep = ~np.isin(keys >> 32, reducer_ids)
+        removed = int(keys.size - keep.sum())
+        if removed:
+            self._keys_by_rel[name] = keys[keep]
+            self._weights_by_rel[name] = self._weights_by_rel[name][keep]
+            self._batch_by_rel[name] = self._batch_by_rel[name][keep]
+        return removed
+
     def expire(self, name: str, batch_id: int) -> int:
         """Remove every entry batch ``batch_id`` contributed to a relation's
         index (windowed retention).  Returns the number removed."""

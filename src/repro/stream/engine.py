@@ -65,7 +65,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.planner import SharesSkewPlan, plan_with_hh
+from repro.core.planner import SharesSkewPlan, plan_with_hh, repair_plan
 from repro.core.schema import JoinQuery
 from repro.mapreduce.keys import map_phase, static_route_table
 from repro.mapreduce.local_join import (
@@ -73,11 +73,25 @@ from repro.mapreduce.local_join import (
     local_join_count_checksum,
     local_join_count_checksum_jit,
 )
+from repro.mapreduce.straggler import FailureDetector
 
 from .admission import AdmissionController, AdmissionPolicy
 from .delta import SortedDeltaIndex
 from .drift import DriftDecision, DriftMonitor
-from .retention import RetentionPolicy, carried_tuples, remove_prefix
+from .recovery import (
+    HostTracker,
+    RecoveryExhaustedError,
+    RecoveryPolicy,
+    RecoveryReport,
+)
+from .retention import (
+    RetentionPolicy,
+    carried_tuples,
+    lost_occupancy,
+    remove_prefix,
+    select_reducers,
+    zero_reducers,
+)
 from .sketch import StreamHHTracker
 
 _MASK32 = 0xFFFFFFFF
@@ -113,6 +127,11 @@ class StreamConfig:
     # unbounded §6 baseline bit-for-bit.
     retention: RetentionPolicy = RetentionPolicy()
     admission: AdmissionPolicy = AdmissionPolicy()
+    # Reducer-loss recovery (DESIGN.md §5): off by default; with
+    # ``RecoveryPolicy(n_hosts=H)`` reducers multiplex over H simulated
+    # hosts, host loss is detected by heartbeat deadline and recovered by
+    # lineage replay / plan repair at batch boundaries.
+    recovery: RecoveryPolicy = RecoveryPolicy()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +275,23 @@ class StreamingJoinEngine:
             if config.admission.enabled
             else None
         )
+
+        # reducer-loss recovery (DESIGN.md §5): host placement, heartbeat
+        # detector clocked in batch indices, and the per-event reports
+        self._hosts: HostTracker | None = (
+            HostTracker(config.recovery) if config.recovery.enabled else None
+        )
+        self._detector: FailureDetector | None = (
+            FailureDetector(config.recovery.deadline_batches)
+            if config.recovery.enabled
+            else None
+        )
+        self._fault_injector = None  # armed via arm_faults()
+        self._pending_host_events: list = []
+        self._exhausted = False
+        self._slots_per_host = 1
+        self.recoveries: list[RecoveryReport] = []
+        self.total_replayed = 0
 
         # fused-ingest bookkeeping: columns the kernel must sketch per
         # relation (tracker attr order), and a loud counter so callers can
@@ -491,6 +527,12 @@ class StreamingJoinEngine:
         self.monitor.install(plan, self.query, batch)
         migrated = self._rebuild_routed_state()
         self.total_migrated += migrated
+        if self._hosts is not None:
+            self._hosts.assign(plan.total_reducers)
+            self._slots_per_host = max(
+                1,
+                -(-plan.total_reducers // max(1, len(self._hosts.alive))),
+            )
         return migrated
 
     # ---- retention (DESIGN.md §8) ------------------------------------------
@@ -615,6 +657,239 @@ class StreamingJoinEngine:
         worst = max((load for _, _, load in loads), default=0.0)
         return max(1.0, worst / max(self.config.q, 1e-9))
 
+    # ---- reducer-loss recovery (DESIGN.md §5) ------------------------------
+    def arm_faults(self, injector) -> None:
+        """Attach a ``repro.testing.faults.FaultInjector`` whose host faults
+        (``host_loss`` / ``partition``) fire at absolute batch indices at
+        the ingest boundary.  Indices are absolute (``len(reports)``), so a
+        restored engine resumes past already-fired faults — they never
+        re-fire across a checkpoint boundary."""
+        self._fault_injector = injector
+
+    def _last_batch(self) -> dict[str, np.ndarray]:
+        """Most recent retained batch (drift-monitor baseline for a repair
+        install); empty arrays when nothing is retained."""
+        return {
+            r.name: (
+                self._history[r.name][-1]
+                if self._history[r.name]
+                else np.zeros((0, r.arity), dtype=np.int64)
+            )
+            for r in self.query.relations
+        }
+
+    def _lineage(self, rel, i: int) -> _Routed:
+        """Batch ``i``'s routed emissions for one relation: the retained
+        routed log when retention keeps it (true lineage), else a
+        deterministic re-route of the retained raw batch — ``map_phase``
+        is per-row deterministic, so both reproduce the original emission
+        order exactly."""
+        if self.config.retention.enabled:
+            return self._routed_log[rel.name][i]
+        return self._route_any(rel, self._history[rel.name][i])
+
+    def _state_join_fingerprint(self) -> tuple[int, int]:
+        """(count, checksum) of the join evaluated over the carried binned
+        state — the einsum oracle the window fingerprint must match."""
+        bins = {nm: jnp.asarray(b) for nm, (b, _, _) in self._state.items()}
+        valids = {nm: jnp.asarray(v) for nm, (_, v, _) in self._state.items()}
+        cnt, chk = local_join_count_checksum(self.spec, bins, valids)
+        return int(cnt), int(np.uint32(chk)) & _MASK32
+
+    def _resolve_host_events(self, lost_hosts, recovered: bool) -> None:
+        from repro.testing.faults import FaultInjector
+
+        for ev in self._pending_host_events:
+            if not ev.resolved and (
+                ev.spec.host_id in lost_hosts or not recovered
+            ):
+                FaultInjector.mark_host_event(ev, recovered)
+
+    def _exhaust(self, lost_hosts, msg: str) -> None:
+        """Loss beyond the survivable grid: flag the engine dead, resolve
+        the injector events as explicitly reported, and raise."""
+        self._exhausted = True
+        self._resolve_host_events(lost_hosts, recovered=False)
+        raise RecoveryExhaustedError(msg)
+
+    def _replay_lost(self, lost_ids: np.ndarray) -> int:
+        """Lineage replay (DESIGN.md §5 stage 3): zero the lost reducers'
+        bins, then re-scatter ONLY their emissions from each retained
+        batch, in batch order — reproducing the dead bins bit-for-bit
+        (appends land at occupancy offsets, so a batch's emissions refill
+        as the same prefix they originally occupied).  Returns the number
+        of replayed emissions."""
+        for nm in self._state:
+            self._state[nm] = zero_reducers(self._state[nm], lost_ids)
+        if self._delta_index is not None:
+            for nm in self.spec.rel_names:
+                self._delta_index.drop_reducers(nm, lost_ids)
+        replayed = 0
+        for i, rbid in enumerate(self._retained_ids):
+            for rel in self.query.relations:
+                nm = rel.name
+                routed = self._lineage(rel, i)
+                mask = select_reducers(routed.dest, lost_ids)
+                if not mask.any():
+                    continue
+                sub = _Routed(
+                    routed.dest[mask],
+                    routed.rows[mask],
+                    None if routed.rank is None else routed.rank[mask],
+                    np.bincount(
+                        routed.dest[mask], minlength=self.plan.total_reducers
+                    ).astype(np.int64),
+                )
+                self._state[nm] = self._scatter_any(self._state[nm], sub)
+                if self._delta_index is not None:
+                    self._delta_index.append(nm, sub.dest, sub.rows, rbid)
+                replayed += int(sub.dest.size)
+        return replayed
+
+    def _recover(self, lost_hosts: list[int], bid: int) -> RecoveryReport:
+        """Detection has declared ``lost_hosts`` dead: repair placement (or
+        the plan), reconstruct the lost reducers' carried state, verify
+        the window fingerprint, and report.  Raises
+        ``RecoveryExhaustedError`` when the survivors cannot host a
+        correct plan — explicit, never a silent wrong answer."""
+        policy = self.config.recovery
+        hosts = self._hosts
+        lost_ids = hosts.reducers_on(lost_hosts)
+        hosts.declare_lost(lost_hosts)
+        for h in lost_hosts:
+            self._detector.deregister(h)
+        survivors = len(hosts.alive)
+        if survivors < policy.min_hosts:
+            self._exhaust(
+                lost_hosts,
+                f"recovery exhausted at batch {bid}: {survivors} surviving "
+                f"host(s) < min_hosts={policy.min_hosts} "
+                f"(lost {sorted(lost_hosts)})",
+            )
+        reducers_before = self.plan.total_reducers if self.plan else 0
+        lost_share = lost_occupancy(self._state, lost_ids)
+        degrade = (
+            self.plan is not None
+            and survivors / hosts.provisioned < policy.degrade_below
+        )
+        replayed = migrated = 0
+        if self.plan is None or lost_ids.size == 0:
+            mode = "replay"  # nothing carried yet; placement repair only
+            hosts.reassign(lost_ids)
+        elif not degrade:
+            mode = "replay"
+            hosts.reassign(lost_ids)
+            replayed = self._replay_lost(lost_ids)
+        else:
+            mode = "degrade"
+            from repro.train.elastic import plan_mesh_shape
+
+            mesh = plan_mesh_shape(
+                survivors, 1, chips_per_pod=policy.hosts_per_pod
+            )
+            k_target = mesh.chips_used * self._slots_per_host
+            try:
+                repaired = repair_plan(self.plan, k_target)
+            except ValueError as e:
+                self._exhaust(
+                    lost_hosts, f"recovery exhausted at batch {bid}: {e}"
+                )
+            # full rebuild under the repaired plan reconstructs every
+            # reducer's state (lost bins included) and re-places reducers
+            # over the survivors; admission tightens to surviving capacity
+            migrated = self._install(repaired, self._last_batch())
+            if self._controller is not None:
+                self._controller.set_capacity(survivors / hosts.provisioned)
+        verified = True
+        if policy.verify and self.plan is not None:
+            cnt, chk = self._state_join_fingerprint()
+            verified = (
+                cnt == self.window_count and chk == self.window_checksum
+            )
+            if not verified:
+                self._exhausted = True
+                self._resolve_host_events(lost_hosts, recovered=False)
+                raise RecoveryExhaustedError(
+                    f"recovered state fails fingerprint verification at "
+                    f"batch {bid}: joined ({cnt}, {chk:#010x}) != window "
+                    f"({self.window_count}, {self.window_checksum:#010x})"
+                )
+        report = RecoveryReport(
+            batch=bid,
+            lost_hosts=tuple(sorted(lost_hosts)),
+            lost_reducers=int(lost_ids.size),
+            mode=mode,
+            survivors=survivors,
+            batches_replayed=len(self._retained_ids),
+            replayed_tuples=replayed,
+            lost_share_tuples=lost_share,
+            migrated_tuples=migrated,
+            reducers_before=reducers_before,
+            reducers_after=self.plan.total_reducers if self.plan else 0,
+            verified=verified,
+        )
+        self.recoveries.append(report)
+        self.total_replayed += replayed
+        self._resolve_host_events(lost_hosts, recovered=True)
+        self._log(
+            f"[stream] recovered from loss of host(s) {sorted(lost_hosts)} "
+            f"at batch {bid}: mode={mode}, {lost_ids.size} reducer(s), "
+            f"replayed {replayed}/{lost_share} lineage tuples, "
+            f"migrated {migrated}, survivors {survivors}/{hosts.provisioned}"
+        )
+        return report
+
+    def _host_boundary(self, bid: int) -> None:
+        """The per-batch recovery boundary: heal due partitions, fire
+        scheduled host faults, heartbeat the live hosts into the detector
+        (clocked in batch indices), and recover from any host the
+        deadline declares lost."""
+        hosts = self._hosts
+        healed = hosts.heal_due(bid)
+        if healed:
+            self._log(
+                f"[stream] partition healed at batch {bid}: host(s) "
+                f"{healed} rejoin as empty spares"
+            )
+        if self._fault_injector is not None:
+            for ev in self._fault_injector.fire_host_faults(bid):
+                s = ev.spec
+                heal = None if s.kind == "host_loss" else bid + s.heal_after
+                hosts.silence(s.host_id, heal)
+                self._pending_host_events.append(ev)
+        members = set(self._detector.members)
+        for h in hosts.alive:
+            if h not in members:  # join-time registration: assume a beat
+                self._detector.heartbeat(h, bid - 1)  # one batch ago
+        for h in hosts.beating():
+            self._detector.heartbeat(h, bid)
+        lost = [h for h in self._detector.overdue(bid) if h in hosts.alive]
+        if lost:
+            self._recover(lost, bid)
+
+    def fail_hosts(self, hosts_to_kill) -> RecoveryReport | None:
+        """Kill hosts outright, outside the injector schedule (the demo /
+        operational path: ``examples/streaming_join.py --kill-reducer``).
+        Runs the same detect→recover boundary immediately and returns the
+        resulting report (None if the kill removed no live host)."""
+        if self._hosts is None:
+            raise RuntimeError(
+                "recovery is disabled: set StreamConfig.recovery = "
+                "RecoveryPolicy(n_hosts=...)"
+            )
+        bid = len(self.reports)
+        deadline = self.config.recovery.deadline_batches
+        for h in hosts_to_kill:
+            self._hosts.silence(int(h), None)
+            if int(h) in self._detector.members:
+                # an explicit kill is not a silent failure: rewind the
+                # heartbeat past the deadline so detection fires NOW even
+                # if the host beat at this same boundary already
+                self._detector.heartbeat(int(h), bid - deadline)
+        before = len(self.recoveries)
+        self._host_boundary(bid)
+        return self.recoveries[-1] if len(self.recoveries) > before else None
+
     # ---- delta join --------------------------------------------------------
     def _delta_join_sorted(
         self, new_routed: dict[str, _Routed], batch_id: int
@@ -691,11 +966,22 @@ class StreamingJoinEngine:
     # ---- public API --------------------------------------------------------
     def ingest(self, batch: dict[str, np.ndarray]) -> BatchReport:
         """Process one micro-batch; returns its telemetry."""
+        if self._exhausted:
+            raise RecoveryExhaustedError(
+                "engine lost more hosts than the survivable grid; carried "
+                "state is unrecoverable and ingest refuses to produce "
+                "answers from it"
+            )
         offered = {
             r.name: np.asarray(batch[r.name]).reshape(-1, r.arity)
             for r in self.query.relations
         }
         now = self._clock()
+
+        # 0. recovery boundary: heal partitions, fire scheduled host
+        #    faults, detect and recover losses BEFORE the batch joins
+        if self._hosts is not None:
+            self._host_boundary(len(self.reports))
 
         # 1. admission: backlog + batch against the live budget
         if self._controller is not None:
@@ -924,6 +1210,15 @@ class StreamingJoinEngine:
         }
         if self._controller is not None:
             tree["admission"] = self._controller.state_dict()
+        if self._hosts is not None:
+            tree["hosts"] = self._hosts.state_dict()
+            tree["recovery_scalars"] = np.array(
+                [int(self._exhausted), self._slots_per_host, self.total_replayed],
+                dtype=np.int64,
+            )
+            tree["recovery_blob"] = np.frombuffer(
+                pickle.dumps(self.recoveries), dtype=np.uint8
+            ).copy()
         return _save(
             directory,
             step=len(self.reports),
@@ -1011,8 +1306,25 @@ class StreamingJoinEngine:
                     if k.startswith("admission/")
                 }
             )
+        if eng._hosts is not None and "hosts/alive" in flat:
+            eng._hosts.load_state_dict(
+                {
+                    k[len("hosts/") :]: v
+                    for k, v in flat.items()
+                    if k.startswith("hosts/")
+                }
+            )
+            rs = np.asarray(flat["recovery_scalars"]).tolist()
+            eng._exhausted = bool(rs[0])
+            eng._slots_per_host = int(rs[1])
+            eng.total_replayed = int(rs[2])
+            eng.recoveries = pickle.loads(flat["recovery_blob"].tobytes())
         if eng.plan is not None:
             eng._rebuild_routed_state()
+            if eng._hosts is not None and (
+                eng._hosts.host_of.size != eng.plan.total_reducers
+            ):  # pre-recovery checkpoint: place reducers fresh
+                eng._hosts.assign(eng.plan.total_reducers)
         # loads are arrivals-per-epoch telemetry (they include expired and
         # migrated arrivals), not derivable from the retained rebuild
         eng._loads = np.asarray(flat["loads"]).astype(np.int64)

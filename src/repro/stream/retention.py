@@ -112,6 +112,47 @@ def remove_prefix(state: State, counts: np.ndarray) -> State:
     return new_bins, new_valid, new_occup.astype(occup.dtype)
 
 
+def lost_occupancy(states: dict[str, State], lost: np.ndarray) -> int:
+    """The lost reducers' retained-window share: total emissions their
+    bins held across all relations.  Lineage replay must reconstruct
+    exactly this many tuples — the acceptance bound that distinguishes
+    replay from a full-stream restore (DESIGN.md §5)."""
+    lost = np.asarray(lost, dtype=np.int64)
+    total = 0
+    for _, _, occup in states.values():
+        if occup.size and lost.size:
+            total += int(occup[lost].sum())
+    return total
+
+
+def zero_reducers(state: State, lost: np.ndarray) -> State:
+    """Clear the lost reducers' bins — the state-side materialization of a
+    host loss (their carried tuples are unreachable).  Lineage replay then
+    refills exactly these rows batch-by-batch; because appends scatter in
+    batch-arrival order, the refilled bins are bit-identical to the bins
+    the dead host carried."""
+    lost = np.asarray(lost, dtype=np.int64)
+    bins, valid, occup = state
+    if lost.size == 0:
+        return state
+    bins, valid, occup = bins.copy(), valid.copy(), occup.copy()
+    bins[lost] = 0
+    valid[lost] = False
+    occup[lost] = 0
+    return bins, valid, occup
+
+
+def select_reducers(
+    dest: np.ndarray, lost: np.ndarray
+) -> np.ndarray:
+    """Boolean mask over one routed batch's emissions selecting those
+    destined for the lost reducers — the per-batch lineage slice replay
+    re-scatters."""
+    if dest.size == 0 or np.asarray(lost).size == 0:
+        return np.zeros(dest.shape, dtype=bool)
+    return np.isin(dest, np.asarray(lost, dtype=dest.dtype))
+
+
 def carried_tuples(states: dict[str, State]) -> tuple[int, int]:
     """(total retained emissions, worst per-reducer occupancy) across all
     relations — the soak metric that must stay flat under retention."""

@@ -1,5 +1,7 @@
 """Test harnesses: deterministic fault injection for the execution seams."""
 from .faults import (
+    KINDS,
+    TARGETS,
     FaultEvent,
     FaultInjector,
     FaultReport,
@@ -10,6 +12,8 @@ from .faults import (
 )
 
 __all__ = [
+    "KINDS",
+    "TARGETS",
     "FaultEvent",
     "FaultInjector",
     "FaultReport",

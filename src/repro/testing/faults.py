@@ -21,10 +21,26 @@ by random chance — at the two seams where a real deployment loses work:
     quality only* — the join fingerprint must be bit-identical, because
     correctness never depends on the sketch.  The tap records every
     tampered batch so a test can assert both halves of that contract.
+  * **Hosts** (``target="host"``, consumed by the streaming engine's
+    recovery subsystem, DESIGN.md §5): ``host_loss`` permanently kills a
+    host at an *absolute* batch index — its reducers' carried state is
+    gone and must be lineage-replayed onto survivors; ``partition``
+    silences a host's heartbeats for ``heal_after`` batches without
+    destroying state — the detector (correctly) declares it lost, and on
+    healing the stale host is fenced and rejoins as an empty spare.
+    Batch indices are absolute (``len(engine.reports)``), so a schedule
+    survives checkpoint/restore without re-firing pre-kill faults.
+  * **Result integrity** (``corrupt_result``): flips bytes in a shard's
+    sealed result envelope after the compute but before the collector
+    reads it.  Requires ``checksum_results=True`` on the runner — the CRC
+    check turns silent corruption into a failed attempt (retried, or an
+    explicit error), never a wrong answer.
 
 Every injected fault is recorded as a ``FaultEvent``; ``resolve()`` maps
 events to shard outcomes and ``assert_all_resolved()`` fails a test if any
-fault vanished without a retry-success or an explicit report.
+fault vanished without a retry-success or an explicit report.  Host events
+are resolved by the engine when recovery completes (``outcome="result"``)
+or exhausts (``outcome="error"`` — still explicit, still resolved).
 """
 from __future__ import annotations
 
@@ -33,8 +49,16 @@ import threading
 import time
 from typing import Callable, Iterable, Sequence
 
-KINDS = ("drop", "duplicate", "delay", "preempt")
-TARGETS = ("shard", "sketch")
+KINDS = (
+    "drop",
+    "duplicate",
+    "delay",
+    "preempt",
+    "host_loss",
+    "partition",
+    "corrupt_result",
+)
+TARGETS = ("shard", "sketch", "host")
 
 
 class InjectedFault(RuntimeError):
@@ -53,22 +77,38 @@ class FaultSpec:
     ``target="shard"``: fires on shard ``shard_id``'s attempt number
     ``attempt`` (1-based; speculative/duplicate submissions count).
     ``target="sketch"``: fires on the ``batch``-th tapped observe call.
+    ``target="host"``: fires at the *absolute* batch index ``batch``
+    (``len(engine.reports)`` at the boundary), killing (``host_loss``) or
+    partitioning (``partition``, healing after ``heal_after`` batches)
+    host ``host_id``.
     """
 
-    kind: str  # drop | duplicate | delay | preempt
+    kind: str  # drop | duplicate | delay | preempt | host_loss | partition
+    #            | corrupt_result
     target: str = "shard"
     shard_id: int = 0
     attempt: int = 1
-    batch: int = 0  # sketch faults: which observe() call to tamper
+    batch: int = 0  # sketch faults: which observe() call to tamper;
+    #                 host faults: absolute batch index at which to fire
     delay_s: float = 0.05  # delay faults: how long to stall
+    host_id: int = 0  # host faults: which host dies / is partitioned
+    heal_after: int = 2  # partition faults: batches until the host rejoins
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.target not in TARGETS:
             raise ValueError(f"unknown fault target {self.target!r}")
-        if self.target == "sketch" and self.kind in ("delay", "preempt"):
+        if self.target == "sketch" and self.kind not in ("drop", "duplicate"):
             raise ValueError("sketch faults support drop/duplicate only")
+        if self.kind in ("host_loss", "partition") and self.target != "host":
+            raise ValueError(f"{self.kind} faults require target='host'")
+        if self.target == "host" and self.kind not in ("host_loss", "partition"):
+            raise ValueError("host faults support host_loss/partition only")
+        if self.kind == "corrupt_result" and self.target != "shard":
+            raise ValueError("corrupt_result faults require target='shard'")
+        if self.kind == "partition" and self.heal_after < 1:
+            raise ValueError("partition heal_after must be >= 1 batch")
 
 
 @dataclasses.dataclass
@@ -91,6 +131,9 @@ class FaultReport:
     reported: int  # shard faults whose shard ended in an explicit error
     sketch_tampered: int  # sketch increments dropped/duplicated (quality-only)
     unresolved: int  # faults with neither outcome — must be 0
+    recovered: int = 0  # host faults the engine recovered from (lineage
+    #                     replay or degraded repair; exhaustion counts as
+    #                     ``reported``)
 
 
 class FaultInjector:
@@ -138,7 +181,7 @@ class FaultInjector:
             if s.target == "shard"
             and s.shard_id == shard_id
             and s.attempt == attempt
-            and s.kind in ("drop", "delay", "preempt")
+            and s.kind in ("drop", "delay", "preempt", "corrupt_result")
         ]
         if not specs:
             return fn
@@ -162,9 +205,26 @@ class FaultInjector:
                         f"shard {shard_id} attempt {attempt}: preempted "
                         "after compute, result lost"
                     )
+            for s in specs:
+                if s.kind == "corrupt_result":
+                    result = self._corrupt(s, shard_id, attempt, result)
             return result
 
         return faulted
+
+    def _corrupt(self, spec: FaultSpec, shard_id: int, attempt: int, result):
+        """Flip a byte in a sealed result's payload without updating the
+        CRC — in-transit corruption the collector's checksum must catch."""
+        payload = getattr(result, "payload", None)
+        crc = getattr(result, "crc", None)
+        if not isinstance(payload, bytes) or crc is None:
+            raise RuntimeError(
+                f"corrupt_result on shard {shard_id} attempt {attempt} needs "
+                "a sealed result envelope — run with checksum_results=True"
+            )
+        self._record(spec, "corrupted")
+        tampered = bytes([payload[0] ^ 0xFF]) + payload[1:]
+        return dataclasses.replace(result, payload=tampered)
 
     # ---- sketch seam -------------------------------------------------------
     def sketch_faults(self, call_index: int) -> list[FaultSpec]:
@@ -173,6 +233,32 @@ class FaultInjector:
             for s in self.faults
             if s.target == "sketch" and s.batch == call_index
         ]
+
+    # ---- host seam ---------------------------------------------------------
+    def fire_host_faults(self, batch: int) -> list[FaultEvent]:
+        """Record and return the host faults scheduled for the *absolute*
+        batch index ``batch`` — each fires exactly once even across a
+        checkpoint/restore boundary, because a restored engine resumes at
+        ``len(reports)`` past every already-fired index.  The engine marks
+        the returned events resolved once recovery completes (or fails
+        explicitly)."""
+        events = []
+        with self._lock:
+            fired = {id(ev.spec) for ev in self.events if ev.spec.target == "host"}
+        for s in self.faults:
+            if s.target != "host" or s.batch != batch or id(s) in fired:
+                continue
+            action = "host_lost" if s.kind == "host_loss" else "partitioned"
+            events.append(self._record(s, action))
+        return events
+
+    @staticmethod
+    def mark_host_event(ev: FaultEvent, recovered: bool) -> None:
+        """Resolve a host event: ``recovered=True`` means lineage replay or
+        degraded repair restored exactness; ``False`` means recovery was
+        exhausted and the engine raised — explicit either way."""
+        ev.resolved = True
+        ev.outcome = "result" if recovered else "error"
 
     # ---- resolution --------------------------------------------------------
     def resolve(self, outcomes: Sequence) -> None:
@@ -186,6 +272,8 @@ class FaultInjector:
                 if ev.spec.target == "sketch":
                     ev.resolved = True
                     continue
+                if ev.spec.target == "host":
+                    continue  # resolved by the engine via mark_host_event
                 o = by_id.get(ev.spec.shard_id)
                 if o is None:
                     ev.resolved, ev.outcome = False, ""
@@ -199,10 +287,12 @@ class FaultInjector:
     def report(self) -> FaultReport:
         with self._lock:
             events = list(self.events)
-        retried_ok = reported = sketch = unresolved = 0
+        retried_ok = reported = sketch = unresolved = recovered = 0
         for ev in events:
             if ev.spec.target == "sketch":
                 sketch += 1
+            elif ev.spec.target == "host" and ev.outcome == "result":
+                recovered += 1
             elif ev.outcome == "result":
                 retried_ok += 1
             elif ev.outcome == "error":
@@ -215,6 +305,7 @@ class FaultInjector:
             reported=reported,
             sketch_tampered=sketch,
             unresolved=unresolved,
+            recovered=recovered,
         )
 
     def assert_all_resolved(self) -> None:
@@ -226,7 +317,9 @@ class FaultInjector:
             raise AssertionError(
                 f"{len(bad)} injected fault(s) silently absorbed: "
                 + "; ".join(
-                    f"{ev.spec.kind}@shard{ev.spec.shard_id}"
+                    f"{ev.spec.kind}@host{ev.spec.host_id}/batch{ev.spec.batch}"
+                    if ev.spec.target == "host"
+                    else f"{ev.spec.kind}@shard{ev.spec.shard_id}"
                     f"/attempt{ev.spec.attempt}"
                     for ev in bad
                 )
@@ -238,12 +331,19 @@ class FaultySketchTap:
     whole-batch sketch increments per the injector's schedule.  Everything
     else (snapshots, rates, checkpoint state) passes through untouched, so
     an engine keeps working — with a degraded skew picture.  Tampering is
-    quality-only by design: the engine's join fingerprint must not move."""
+    quality-only by design: the engine's join fingerprint must not move.
 
-    def __init__(self, tracker, injector: FaultInjector):
+    ``first_call`` anchors the tap's call counter: a tap on a restored
+    engine must pass ``len(engine.reports)`` so batch-indexed faults that
+    fired before the kill do not re-fire after the restore (the counter
+    resumes where the pre-kill engine's left off).
+
+    """
+
+    def __init__(self, tracker, injector: FaultInjector, first_call: int = 0):
         self._tracker = tracker
         self._injector = injector
-        self._calls = 0
+        self._calls = first_call
 
     def __getattr__(self, name):
         return getattr(self._tracker, name)

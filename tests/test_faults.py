@@ -8,6 +8,8 @@ Seams exercised (``repro.testing.faults``):
   * sketch increments via ``FaultySketchTap`` — quality-only by contract:
     the engine's fingerprint must not move.
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -16,7 +18,7 @@ from repro.data import paper_2way
 from repro.mapreduce import oracle_join, run_join
 from repro.mapreduce.executor import run_join_speculative
 from repro.mapreduce.straggler import run_with_speculation
-from repro.stream import StreamConfig, StreamingJoinEngine
+from repro.stream import RecoveryPolicy, StreamConfig, StreamingJoinEngine
 from repro.testing import (
     FaultInjector,
     FaultSpec,
@@ -154,6 +156,103 @@ def test_straggler_runner_outcome_fields():
     assert "always dies" in outcomes[1].error
 
 
+def test_backup_latency_is_the_winning_attempts_own():
+    """A zombie attempt fenced by the deadline must not pollute the
+    winner's latency: ``elapsed_s`` is the winning attempt's own runtime,
+    not the shard's first-submit age."""
+    calls = []
+
+    def hang_then_fast():
+        first = len(calls) == 0
+        calls.append(1)
+        if first:
+            time.sleep(1.0)  # zombie: sleeps past the deadline
+            return "zombie"
+        return "fresh"
+
+    outcomes = run_with_speculation(
+        [hang_then_fast],
+        max_attempts=2,
+        deadline_s=0.25,
+        poll_interval_s=0.01,
+        speculate_after=100.0,  # only the deadline re-issues here
+    )
+    o = outcomes[0]
+    assert o.result == "fresh" and o.error is None
+    assert o.attempts == 2
+    # the retry returns in milliseconds; the shard has been pending ~0.3s.
+    # First-submit-age timing would report >= 0.25 here.
+    assert o.elapsed_s < 0.2
+
+
+def test_terminal_error_race_one_outcome_per_shard():
+    """A terminal error recorded while a speculative sibling is still in
+    flight must not drop (or double) the shard's outcome: exactly one
+    ``ShardOutcome`` per shard, carrying the error."""
+
+    def doomed():
+        time.sleep(0.2)  # slow enough that a backup overlaps
+        raise InjectedFault("dies slowly")
+
+    outcomes = run_with_speculation(
+        [doomed, lambda: 1, lambda: 2],
+        max_attempts=2,
+        speculate_after=0.5,
+        min_completed_before_speculation=2,
+        poll_interval_s=0.01,
+    )
+    assert len(outcomes) == 3
+    assert [o.shard_id for o in outcomes] == [0, 1, 2]
+    o = outcomes[0]
+    assert o.result is None and o.error is not None
+    assert "dies slowly" in o.error
+    assert o.attempts == 2
+    assert outcomes[1].result == 1 and outcomes[2].result == 2
+
+
+# --------------------------------------------------------- corrupt results
+def test_corrupt_result_detected_and_retried(sharded_case):
+    """A corrupted shard result fails CRC verification on receipt, counts
+    as a failed attempt, and the retry reproduces the exact answer — a
+    corrupt result is never returned."""
+    data, plan, base = sharded_case
+    inj = FaultInjector(
+        [FaultSpec(kind="corrupt_result", shard_id=0, attempt=1)]
+    )
+    res = _speculative(data, plan, inj)
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+    inj.assert_all_resolved()
+    rep = inj.report()
+    assert rep.injected == 1 and rep.retried_ok == 1 and rep.unresolved == 0
+
+
+def test_corrupt_every_attempt_is_loud(sharded_case):
+    """If every attempt's result is corrupted the shard fails explicitly
+    with the checksum error — never a silently wrong join."""
+    data, plan, _ = sharded_case
+    inj = FaultInjector(
+        [FaultSpec(kind="corrupt_result", shard_id=1, attempt=a)
+         for a in (1, 2, 3)]
+    )
+    with pytest.raises(RuntimeError, match="ChecksumMismatch"):
+        _speculative(data, plan, inj, max_attempts=3)
+    inj.assert_all_resolved()
+
+
+def test_corrupt_result_without_envelope_refused():
+    """The corrupt seam requires the CRC envelope: faulting a run with
+    ``checksum_results=False`` raises instead of silently corrupting."""
+    inj = FaultInjector(
+        [FaultSpec(kind="corrupt_result", shard_id=0, attempt=1)]
+    )
+    outcomes = run_with_speculation(
+        [lambda: 7], injector=inj, checksum_results=False, max_attempts=2
+    )
+    # the refusal is an attempt failure -> the retry (unfaulted) succeeds
+    assert outcomes[0].result == 7
+    assert outcomes[0].attempts == 2
+
+
 # ------------------------------------------------------------ sketch faults
 def test_sketch_faults_are_quality_only():
     """Dropped/duplicated sketch increments may degrade planning but must
@@ -186,6 +285,66 @@ def test_sketch_faults_are_quality_only():
     inj.resolve([])
     inj.assert_all_resolved()
     assert inj.report().sketch_tampered == 2
+
+
+# ------------------------------------------- injector across restore (§8)
+def test_fault_injector_active_across_restore_boundary(tmp_path):
+    """Satellite: a ``FaultInjector`` stays armed across checkpoint/restore
+    and already-fired faults do NOT re-fire.  Sketch faults are keyed by
+    the tap's call counter (``first_call=len(reports)`` on the restored
+    engine resumes it); host faults are keyed by absolute batch index and
+    deduplicated by the injector's recorded events.  The restored run must
+    converge to the same fingerprint as an uninterrupted reference."""
+    specs = lambda: [
+        FaultSpec(kind="drop", target="sketch", batch=1),  # pre-kill
+        FaultSpec(kind="host_loss", target="host", host_id=2, batch=2),
+        FaultSpec(kind="duplicate", target="sketch", batch=4),  # post-kill
+        FaultSpec(kind="host_loss", target="host", host_id=5, batch=5),
+    ]
+    cfg = StreamConfig(
+        q=60, decay=0.5, load_factor=2.0,
+        recovery=RecoveryPolicy(n_hosts=8),
+    )
+    rng_ref = np.random.default_rng(21)
+    batches = [
+        paper_2way(rng_ref, n_r=300, n_s=100, domain=400) for _ in range(7)
+    ]
+
+    ref_inj = FaultInjector(specs())
+    ref = StreamingJoinEngine(two_way(), cfg)
+    ref.tracker = FaultySketchTap(ref.tracker, ref_inj)
+    ref.arm_faults(ref_inj)
+    for b in batches:
+        ref.ingest(b)
+    assert [r.batch for r in ref.recoveries] == [2, 5]
+
+    inj = FaultInjector(specs())
+    eng = StreamingJoinEngine(two_way(), cfg)
+    eng.tracker = FaultySketchTap(eng.tracker, inj)
+    eng.arm_faults(inj)
+    for b in batches[:3]:  # batch-1 sketch fault and batch-2 loss fire
+        eng.ingest(b)
+    assert len(eng.recoveries) == 1
+    eng.save_checkpoint(str(tmp_path))
+    del eng  # killed
+
+    resumed = StreamingJoinEngine.restore(str(tmp_path), two_way(), cfg)
+    resumed.tracker = FaultySketchTap(
+        resumed.tracker, inj, first_call=len(resumed.reports)
+    )
+    resumed.arm_faults(inj)  # SAME injector: its event log survives
+    for b in batches[3:]:
+        resumed.ingest(b)
+    # pre-kill faults did not re-fire: one recovery each side of the kill
+    assert [r.batch for r in resumed.recoveries] == [2, 5]
+    assert inj.report().sketch_tampered == 2  # batch 1 once, batch 4 once
+    inj.resolve([])
+    inj.assert_all_resolved()
+    assert (resumed.total_count, resumed.total_checksum) == (
+        ref.total_count, ref.total_checksum,
+    )
+    count, checksum, _, _ = oracle_join(two_way(), resumed.history_data())
+    assert (resumed.total_count, resumed.total_checksum) == (count, checksum)
 
 
 # ----------------------------------------------- engine preempt-mid-stream

@@ -1,0 +1,456 @@
+"""Reducer-loss recovery tests (DESIGN.md §5).
+
+The contract under test: with ``RecoveryPolicy(n_hosts=H)`` the engine
+multiplexes logical reducers over H simulated hosts; killing hosts
+mid-stream is detected at the next batch boundary and recovered WITHOUT a
+checkpoint restore — lineage replay rebuilds exactly the lost reducers'
+carried state from the retained window, the window fingerprint matches
+both the einsum oracle and ``recompute_distributed(window=True)``
+bit-for-bit, replayed tuples never exceed the lost reducers' retained
+share, sustained loss degrades elastically (smaller grid, tighter
+admission), and loss beyond the survivable grid is an explicit
+``RecoveryExhaustedError`` — never a silently wrong window.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    make_query,
+    plan_shares_skew,
+    solve_shares,
+    two_way,
+    two_way_skew_shares,
+)
+from repro.core.planner import repair_plan
+from repro.core.shares import reproject_solution
+from repro.mapreduce import oracle_join
+from repro.mapreduce.straggler import FailureDetector
+from repro.stream import (
+    AdmissionPolicy,
+    HostTracker,
+    RecoveryExhaustedError,
+    RecoveryPolicy,
+    RetentionPolicy,
+    StreamConfig,
+    StreamingJoinEngine,
+)
+from repro.testing import FaultInjector, FaultSpec
+
+pytestmark = pytest.mark.recovery
+
+
+def _zipf_batch(rng, shift, n_r=240, n_s=80, domain=600, a=1.6):
+    """Skewed 2-way batch; ``shift`` rotates the hot keys (drift)."""
+    b_r = ((rng.zipf(a, n_r) - 1) + shift) % domain
+    b_s = ((rng.zipf(a, n_s) - 1) + shift) % domain
+    r = np.stack([rng.integers(0, domain, n_r), b_r], 1).astype(np.int64)
+    s = np.stack([b_s, rng.integers(0, domain, n_s)], 1).astype(np.int64)
+    return {"R": r, "S": s}
+
+
+def _cfg(**kw):
+    kw.setdefault("q", 60)
+    kw.setdefault("decay", 0.5)
+    kw.setdefault("load_factor", 2.0)
+    kw.setdefault("retention", RetentionPolicy(window_batches=4))
+    kw.setdefault("recovery", RecoveryPolicy(n_hosts=8))
+    return StreamConfig(**kw)
+
+
+def _assert_window_exact(eng):
+    """The acceptance invariant: maintained fingerprint == einsum oracle
+    == distributed recompute, bit-for-bit."""
+    count, checksum, _, _ = oracle_join(eng.query, eng.history_data())
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+    # degraded plans concentrate the window on few reducers; generous
+    # caps keep the cross-check overflow-free so the comparison is exact
+    res = eng.recompute_distributed(
+        window=True, cap_factor=24.0, route_cap_factor=24.0
+    )
+    assert res.overflow == 0
+    assert (res.count, res.checksum) == (count, checksum)
+
+
+# ---------------------------------------------------------------- replay
+def test_single_host_loss_replays_exactly():
+    """Kill one host on a drifting Zipf stream: recovery runs in replay
+    mode (plan untouched), rebuilds only the lost reducers' bins from the
+    retained window, and the window stays exact afterwards."""
+    rng = np.random.default_rng(0)
+    eng = StreamingJoinEngine(two_way(), _cfg())
+    for i in range(5):
+        eng.ingest(_zipf_batch(rng, 0 if i < 3 else 300))
+    rep = eng.fail_hosts([2])
+    assert rep is not None
+    assert rep.mode == "replay"
+    assert rep.lost_hosts == (2,)
+    assert rep.lost_reducers >= 1
+    assert rep.verified
+    # lineage replay ships exactly the lost reducers' retained share,
+    # never more (acceptance: replayed <= lost share)
+    assert rep.replayed_tuples == rep.lost_share_tuples
+    assert rep.reducers_before == rep.reducers_after  # plan untouched
+    _assert_window_exact(eng)
+    for i in range(4):  # the engine keeps streaming after recovery
+        eng.ingest(_zipf_batch(rng, 300))
+    _assert_window_exact(eng)
+
+
+def test_multi_host_loss_single_boundary():
+    """Losing several hosts at one boundary is one recovery event; the
+    replay covers every lost reducer and stays exact."""
+    rng = np.random.default_rng(1)
+    eng = StreamingJoinEngine(two_way(), _cfg())
+    for i in range(6):
+        eng.ingest(_zipf_batch(rng, 0 if i < 3 else 200))
+    rep = eng.fail_hosts([0, 5])
+    assert rep.mode == "replay"
+    assert rep.lost_hosts == (0, 5)
+    assert rep.replayed_tuples == rep.lost_share_tuples
+    assert rep.verified
+    assert len(eng.recoveries) == 1
+    _assert_window_exact(eng)
+
+
+def test_replay_without_retention_uses_full_history():
+    """Retention off: the lineage source is the full retained history (the
+    whole stream) — recovery still never touches a checkpoint."""
+    rng = np.random.default_rng(2)
+    eng = StreamingJoinEngine(
+        two_way(), _cfg(retention=RetentionPolicy())  # unbounded
+    )
+    for _ in range(5):
+        eng.ingest(_zipf_batch(rng, 0))
+    rep = eng.fail_hosts([3])
+    assert rep.mode == "replay" and rep.verified
+    assert rep.replayed_tuples == rep.lost_share_tuples
+    count, checksum, _, _ = oracle_join(eng.query, eng.history_data())
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+
+
+def test_fused_path_recovers_identically():
+    """The fused-ingest hot path carries a sorted delta index alongside the
+    bins; recovery must drop + replay both representations coherently."""
+    rng = np.random.default_rng(3)
+    eng = StreamingJoinEngine(two_way(), _cfg(fused_ingest=True))
+    for i in range(5):
+        eng.ingest(_zipf_batch(rng, 0 if i < 3 else 300))
+    rep = eng.fail_hosts([2])
+    assert rep.mode == "replay" and rep.verified
+    for _ in range(4):
+        eng.ingest(_zipf_batch(rng, 300))
+    _assert_window_exact(eng)
+
+
+# ---------------------------------------------------------------- detection
+def test_injected_host_loss_detected_at_deadline():
+    """An injector-scheduled ``host_loss`` silences heartbeats at its
+    batch; the deadline declares the host at that same boundary (deadline
+    1 batch, registration backfilled one batch behind) and recovery runs
+    before the batch is admitted."""
+    rng = np.random.default_rng(4)
+    inj = FaultInjector(
+        [FaultSpec(kind="host_loss", target="host", host_id=3, batch=4)]
+    )
+    eng = StreamingJoinEngine(two_way(), _cfg())
+    eng.arm_faults(inj)
+    for i in range(8):
+        eng.ingest(_zipf_batch(rng, 0 if i < 4 else 300))
+    assert len(eng.recoveries) == 1
+    assert eng.recoveries[0].batch == 4
+    assert eng.recoveries[0].lost_hosts == (3,)
+    assert 3 not in eng._hosts.alive
+    inj.assert_all_resolved()
+    assert inj.report().recovered == 1
+    _assert_window_exact(eng)
+
+
+def test_partition_heals_and_host_rejoins_empty():
+    """A ``partition`` silences a host like a loss — its reducers are
+    recovered onto survivors — but after ``heal_after`` batches the host
+    rejoins the pool as an empty spare."""
+    rng = np.random.default_rng(5)
+    inj = FaultInjector(
+        [FaultSpec(kind="partition", target="host", host_id=1, batch=3,
+                   heal_after=2)]
+    )
+    eng = StreamingJoinEngine(two_way(), _cfg())
+    eng.arm_faults(inj)
+    for i in range(4):
+        eng.ingest(_zipf_batch(rng, 0))
+    assert len(eng.recoveries) == 1  # partition looks like loss at first
+    assert 1 not in eng._hosts.alive
+    for i in range(3):
+        eng.ingest(_zipf_batch(rng, 0))
+    assert 1 in eng._hosts.alive  # healed and rejoined
+    inj.assert_all_resolved()
+    _assert_window_exact(eng)
+
+
+def test_failure_detector_unit():
+    det = FailureDetector(deadline=2)
+    det.heartbeat("a", 0)
+    det.heartbeat("b", 1)
+    assert det.overdue(1) == []
+    assert det.overdue(2) == ["a"]
+    assert det.overdue(3) == ["a", "b"]  # oldest lag first
+    det.heartbeat("a", 3)
+    assert det.overdue(3) == ["b"]
+    det.deregister("b")
+    assert det.overdue(10) == ["a"]
+    assert det.members == ("a",)
+    with pytest.raises(ValueError):
+        FailureDetector(deadline=0)
+
+
+# ---------------------------------------------------------------- degrade
+def test_sustained_loss_degrades_elastically():
+    """Dropping below ``degrade_below`` survivors repairs the plan onto a
+    smaller grid (same HH combinations) and tightens admission budgets by
+    the surviving-capacity fraction — and the window stays exact."""
+    rng = np.random.default_rng(6)
+    eng = StreamingJoinEngine(
+        two_way(),
+        _cfg(admission=AdmissionPolicy(headroom=4.0)),
+    )
+    for i in range(5):
+        eng.ingest(_zipf_batch(rng, 0 if i < 3 else 300))
+    combos_before = tuple(r.combo for r in eng.plan.residuals)
+    budgets_before = eng._controller.budgets(eng.plan)
+    first = eng.fail_hosts([0, 1])  # 6/8 alive: still replay mode
+    assert first is not None and first.mode == "replay"
+    rep = eng.fail_hosts([2, 3, 4])  # 3/8 alive: below 0.5 -> degrade
+    assert rep.mode == "degrade"
+    assert rep.reducers_after < rep.reducers_before
+    assert rep.migrated_tuples > 0  # full rebuild re-routed the window
+    assert rep.verified
+    # HH combinations never move during repair
+    assert tuple(r.combo for r in eng.plan.residuals) == combos_before
+    # admission clamps to surviving capacity
+    assert eng._controller.capacity_factor == pytest.approx(3 / 8)
+    budgets_after = eng._controller.budgets(eng.plan)
+    assert all(
+        budgets_after[nm] <= budgets_before[nm] for nm in budgets_after
+    )
+    for _ in range(3):
+        eng.ingest(_zipf_batch(rng, 300))
+    _assert_window_exact(eng)
+
+
+def test_exhaustion_is_loud_and_sticky():
+    """Loss beyond the survivable grid raises ``RecoveryExhaustedError``
+    at the boundary AND on every subsequent ingest — an exhausted engine
+    never produces another (possibly wrong) answer."""
+    rng = np.random.default_rng(7)
+    eng = StreamingJoinEngine(
+        two_way(), _cfg(recovery=RecoveryPolicy(n_hosts=4, min_hosts=2))
+    )
+    for _ in range(4):
+        eng.ingest(_zipf_batch(rng, 0))
+    with pytest.raises(RecoveryExhaustedError, match="min_hosts"):
+        eng.fail_hosts([0, 1, 2])  # 1 survivor < min_hosts=2
+    with pytest.raises(RecoveryExhaustedError):
+        eng.ingest(_zipf_batch(rng, 0))
+
+
+# ------------------------------------------------------------- plan repair
+@pytest.fixture(scope="module")
+def skewed_plan():
+    rng = np.random.default_rng(0)
+    n, domain = 3000, 2000
+    heavy = np.concatenate([np.full(600, 5), np.full(500, 17), np.full(400, 42)])
+    b_r = np.concatenate([heavy, rng.integers(0, domain, n - heavy.size)])
+    r = np.stack([rng.integers(0, domain, n), b_r], 1).astype(np.int64)
+    b_s = np.concatenate(
+        [np.full(120, 5), np.full(100, 17), np.full(80, 42),
+         rng.integers(0, domain, 300)]
+    )
+    s = np.stack([b_s, rng.integers(0, domain, 600)], 1).astype(np.int64)
+    plan = plan_shares_skew(two_way(), {"R": r, "S": s}, q=150)
+    assert len(plan.residuals) >= 3
+    return plan
+
+
+def test_repair_plan_shrinks_in_place(skewed_plan):
+    k_old = skewed_plan.total_reducers
+    repaired = repair_plan(skewed_plan, k_old // 2)
+    assert repaired.total_reducers <= k_old // 2
+    # identical query, q, HH values, and combination list — zero movement
+    assert repaired.query is skewed_plan.query
+    assert repaired.q == skewed_plan.q
+    assert repaired.hh_values == skewed_plan.hh_values
+    assert [r.combo for r in repaired.residuals] == [
+        r.combo for r in skewed_plan.residuals
+    ]
+    # every residual keeps >= 1 reducer, offsets re-packed contiguously
+    offset = 0
+    for r in repaired.residuals:
+        assert r.num_reducers >= 1
+        assert r.reducer_offset == offset
+        offset += r.num_reducers
+
+
+def test_repair_plan_identity_and_exhaustion(skewed_plan):
+    assert repair_plan(skewed_plan, skewed_plan.total_reducers) is skewed_plan
+    assert repair_plan(skewed_plan, 10**6) is skewed_plan
+    with pytest.raises(ValueError, match="residuals"):
+        repair_plan(skewed_plan, len(skewed_plan.residuals) - 1)
+
+
+def test_repaired_plan_still_joins_exactly(skewed_plan):
+    """A repaired plan is a valid plan: executing it reproduces the exact
+    join fingerprint of the incumbent."""
+    from repro.mapreduce import run_join
+
+    rng = np.random.default_rng(8)
+    data = {
+        "R": np.stack(
+            [rng.integers(0, 2000, 800), rng.integers(0, 50, 800)], 1
+        ).astype(np.int64),
+        "S": np.stack(
+            [rng.integers(0, 50, 300), rng.integers(0, 2000, 300)], 1
+        ).astype(np.int64),
+    }
+    base = run_join(two_way(), data, skewed_plan, cap_factor=8.0)
+    repaired = repair_plan(skewed_plan, skewed_plan.total_reducers // 2)
+    res = run_join(two_way(), data, repaired, cap_factor=8.0)
+    assert res.overflow == 0
+    assert (res.count, res.checksum) == (base.count, base.checksum)
+
+
+def test_reproject_solution_scaling():
+    """Shrinking a 2-way skew solution follows the closed form: shares
+    scale by (k'/k)^(1/m) along the constraint normal, landing on the
+    interior optimum at the new budget exactly."""
+    q = make_query({"R": ("A", "B"), "S": ("B", "C")})
+    sizes = {"R": 4_000.0, "S": 1_000.0}  # interior optimum at both k
+    sol = solve_shares(q, sizes, k=64, fixed_to_one=frozenset({"B"}))
+    shrunk = reproject_solution(sol, 16.0)
+    assert shrunk.k == 16.0
+    assert np.prod(list(shrunk.int_shares.values())) <= 16
+    # the 2-way closed form at k'=16: x = sqrt(k r/s) = 8, y = 2
+    a, c = two_way_skew_shares(sizes["R"], sizes["S"], 16)
+    assert shrunk.shares["A"] == pytest.approx(a, rel=1e-4)
+    assert shrunk.shares["C"] == pytest.approx(c, rel=1e-4)
+    direct = solve_shares(q, sizes, k=16, fixed_to_one=frozenset({"B"}))
+    assert shrunk.cost == pytest.approx(direct.cost, rel=1e-4)
+
+
+def test_reproject_solution_boundary_waterfill():
+    """When scaling would push a share below 1, it clamps there and its
+    budget redistributes over the free shares — the product never exceeds
+    the new budget and the projection matches the direct solve."""
+    q = make_query({"R": ("A", "B"), "S": ("B", "C")})
+    sizes = {"R": 10_000.0, "S": 400.0}  # C hits the x >= 1 boundary
+    sol = solve_shares(q, sizes, k=64, fixed_to_one=frozenset({"B"}))
+    shrunk = reproject_solution(sol, 16.0)
+    assert np.prod(list(shrunk.shares.values())) <= 16 + 1e-9
+    assert np.prod(list(shrunk.int_shares.values())) <= 16
+    assert shrunk.shares["C"] == 1.0
+    assert shrunk.shares["A"] == pytest.approx(16.0, rel=1e-6)
+    direct = solve_shares(q, sizes, k=16, fixed_to_one=frozenset({"B"}))
+    assert shrunk.cost == pytest.approx(direct.cost, rel=1e-4)
+
+
+def test_reproject_solution_grow_is_identity():
+    q = make_query({"R": ("A", "B"), "S": ("B", "C")})
+    sol = solve_shares(q, {"R": 1000.0, "S": 1000.0}, k=16)
+    same = reproject_solution(sol, 16.0)
+    assert same.shares == sol.shares
+    grown = reproject_solution(sol, 64.0)  # never grows shares
+    assert grown.shares == sol.shares and grown.k == 64.0
+
+
+# ------------------------------------------------------------ host tracker
+def test_host_tracker_placement_and_ladder():
+    pol = RecoveryPolicy(n_hosts=4)
+    t = HostTracker(pol)
+    t.assign(8)
+    assert t.host_of.tolist() == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert t.reducers_on([1]).tolist() == [2, 3]
+    t.silence(1)  # heartbeats stop; still in the pool
+    assert t.beating() == [0, 2, 3]
+    t.declare_lost([1])
+    assert t.alive == [0, 2, 3]
+    t.reassign(np.array([2, 3]))
+    assert all(h in t.alive for h in t.host_of[[2, 3]])
+    # partition: silenced with a heal batch -> fenced on declare, rejoins
+    t.silence(2, heal_at=7)
+    t.declare_lost([2])
+    assert t.alive == [0, 3] and t.fenced == {2: 7}
+    assert t.heal_due(6) == []
+    assert t.heal_due(7) == [2]
+    assert t.alive == [0, 2, 3]
+    # round-trip
+    t2 = HostTracker(pol)
+    t2.load_state_dict(t.state_dict())
+    assert t2.alive == t.alive
+    assert t2.fenced == t.fenced
+    assert t2.silenced == t.silenced
+    assert t2.host_of.tolist() == t.host_of.tolist()
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(n_hosts=0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(n_hosts=4, deadline_batches=0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(n_hosts=4, degrade_below=1.5)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(n_hosts=4, min_hosts=0)
+    with pytest.raises(ValueError):
+        HostTracker(RecoveryPolicy())  # disabled policy
+    assert not RecoveryPolicy().enabled
+    assert RecoveryPolicy(n_hosts=2).enabled
+
+
+def test_recovery_disabled_engine_refuses_fail_hosts():
+    eng = StreamingJoinEngine(two_way(), _cfg(recovery=RecoveryPolicy()))
+    with pytest.raises(RuntimeError, match="recovery is disabled"):
+        eng.fail_hosts([0])
+
+
+# ------------------------------------------------------------- checkpoints
+def test_recovery_state_survives_checkpoint(tmp_path):
+    """Recovery history, host liveness, and admission capacity all round-
+    trip through save/restore; the restored engine streams on in lockstep."""
+    rng = np.random.default_rng(9)
+    cfg = _cfg(admission=AdmissionPolicy(headroom=4.0),
+               recovery=RecoveryPolicy(n_hosts=8, degrade_below=0.9))
+    eng = StreamingJoinEngine(two_way(), cfg)
+    batches = [_zipf_batch(rng, 0) for _ in range(9)]
+    for b in batches[:5]:
+        eng.ingest(b)
+    rep = eng.fail_hosts([0, 1])  # 6/8 < 0.9 -> degrade, capacity clamped
+    assert rep.mode == "degrade"
+    eng.save_checkpoint(str(tmp_path))
+    resumed = StreamingJoinEngine.restore(str(tmp_path), two_way(), cfg)
+    assert len(resumed.recoveries) == 1
+    assert resumed.recoveries == eng.recoveries
+    assert resumed.total_replayed == eng.total_replayed
+    assert resumed._hosts.alive == eng._hosts.alive
+    assert resumed._controller.capacity_factor == pytest.approx(6 / 8)
+    for b in batches[5:]:
+        eng.ingest(b)
+        resumed.ingest(b)
+    assert (resumed.window_count, resumed.window_checksum) == (
+        eng.window_count, eng.window_checksum,
+    )
+
+
+def test_pre_recovery_checkpoint_restores_with_recovery_on(tmp_path):
+    """A checkpoint written before recovery existed (or with it disabled)
+    restores into a recovery-enabled engine: hosts are assigned fresh and
+    the engine can immediately survive a loss."""
+    rng = np.random.default_rng(10)
+    off = _cfg(recovery=RecoveryPolicy())
+    eng = StreamingJoinEngine(two_way(), off)
+    for _ in range(5):
+        eng.ingest(_zipf_batch(rng, 0))
+    eng.save_checkpoint(str(tmp_path))
+    on = _cfg()
+    resumed = StreamingJoinEngine.restore(str(tmp_path), two_way(), on)
+    assert resumed._hosts.host_of.size == resumed.plan.total_reducers
+    rep = resumed.fail_hosts([0])
+    assert rep is not None and rep.verified
