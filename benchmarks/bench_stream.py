@@ -28,7 +28,19 @@ Tracked:
     recovery must complete at the kill boundary itself (no checkpoint
     restore), replay no more than the lost reducers' retained-window
     share, and verify the window fingerprint; the ``recovery`` sub-record
-    tracks the boundary wall time and replay volume.
+    tracks the boundary wall time and replay volume;
+  * replan boundaries (DESIGN.md §7): the dense route encoding keeps the
+    fused kernel's padded shapes static across replans, so a replan batch
+    must NOT pay a kernel recompile — ``replan_compile_us`` records the
+    replan-boundary overhead over the steady-state median (planning +
+    migration only), with a hard 1 s ceiling per replan batch;
+  * multi-tenant (DESIGN.md §9): a ``MultiQueryEngine`` runs 3 copies of
+    the query over the same batches — every tenant must stay bit-identical
+    to the solo run with ZERO private sketch passes (the shared pass runs
+    once per relation batch), and a weighted fair-share run with an
+    injected overload burst must shed ONLY the offending tenant; the
+    ``tenancy`` sub-record tracks isolation overhead vs N separate
+    engines, sketch-sharing savings, and the per-tenant shed counters.
 
 ``BENCH_stream.json`` (all fields documented in BENCHMARKS.md) records the
 trajectory run over run.  The fused engine counts its kernel passes; this
@@ -49,10 +61,14 @@ from repro.mapreduce import oracle_join, predicted_comm
 from repro.mapreduce.keys import static_route_table
 from repro.stream import (
     AdmissionPolicy,
+    MultiQueryEngine,
     RecoveryPolicy,
     RetentionPolicy,
     StreamConfig,
     StreamingJoinEngine,
+    TenancyPolicy,
+    TenantSpec,
+    replication_width,
 )
 from repro.testing import FaultInjector, FaultSpec
 
@@ -136,6 +152,27 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
         f"{RECORDED_BASELINE_US / 1e3:.0f} ms baseline"
     )
 
+    # replan boundaries: with the dense route encoding the compiled kernel
+    # survives replans, so a replan batch is planning + migration only —
+    # not the multi-second recompile spike PR 8's BENCH_stream recorded
+    replan_ix = [
+        i for i, r in enumerate(fused.reports) if r.replanned and i > 0
+    ]
+    steady_us = [
+        u for i, u in enumerate(fused_us) if i > 0 and i not in replan_ix
+    ]
+    steady_med = _median(steady_us)
+    replan_compile_us = (
+        max(0.0, _median([fused_us[i] for i in replan_ix]) - steady_med)
+        if replan_ix
+        else 0.0
+    )
+    for i in replan_ix:
+        assert fused_us[i] < 1_000_000, (
+            f"replan batch {i} took {fused_us[i] / 1e3:.0f} ms — the fused "
+            "kernel recompiled at a replan boundary"
+        )
+
     # ---- bounded state (DESIGN.md §8) --------------------------------------
     # same batches under windowed retention + admission: carried state must
     # flatten (vs the unbounded engine's monotonic growth) and the window
@@ -193,6 +230,99 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
         r_count, r_checksum,
     ), "post-recovery window fingerprint != oracle"
 
+    # ---- multi-tenant (DESIGN.md §9) ---------------------------------------
+    # 3 tenants over the same batches.  Reference: N separate engines (the
+    # sharing-free deployment).  Contracts: every tenant bit-identical to
+    # the solo run, zero private sketch passes, and the shared pass count
+    # equals (sketch columns) x (batches) — computed once, absorbed N times.
+    n_tenants = 3
+    t_cfg = StreamConfig(q=120, decay=0.5, load_factor=2.0, fused_ingest=True)
+    solo_runs = [run(t_cfg) for _ in range(n_tenants)]
+    solo_engines = [e for e, _ in solo_runs]
+    # per shared batch, the reference cost is the SUM over the N engines;
+    # medians keep one-off compile spikes out of the overhead ratio (the
+    # multi-tenant run compiles a sketch-off kernel variant on batch 0)
+    solo_batch_us = [
+        sum(us[i] for _, us in solo_runs) for i in range(n_batches)
+    ]
+    solo_wall_us = sum(solo_batch_us)
+    solo_med_us = _median(solo_batch_us)
+    solo_private_passes = sum(
+        e.sketch_ingest_calls for e in solo_engines
+    )
+
+    mq = MultiQueryEngine(
+        [TenantSpec(f"t{i}", query, t_cfg) for i in range(n_tenants)],
+        TenancyPolicy(),
+    )
+    mq_batch_us = []
+    for batch in batches:
+        t0 = time.perf_counter()
+        mq.ingest(batch)
+        mq_batch_us.append((time.perf_counter() - t0) * 1e6)
+    mq_wall_us = sum(mq_batch_us)
+    mq_med_us = _median(mq_batch_us)
+    for i in range(n_tenants):
+        eng = mq.engine(f"t{i}")
+        assert (eng.total_count, eng.total_checksum) == (count, checksum), (
+            f"tenant t{i} diverged from the solo engine"
+        )
+        assert eng.sketch_ingest_calls == 0, (
+            f"tenant t{i} computed {eng.sketch_ingest_calls} private sketch "
+            "passes — sketch sharing silently fell back"
+        )
+    n_sketch_cols = 2  # (B, R) and (B, S): one shared signature group
+    assert mq.shared_sketch_passes == n_sketch_cols * n_batches, (
+        f"shared sketch ran {mq.shared_sketch_passes} column passes, "
+        f"expected {n_sketch_cols * n_batches} (once per relation batch)"
+    )
+    isolation_overhead = mq_med_us / solo_med_us
+    assert isolation_overhead < 1.5, (
+        f"multi-tenant median batch {isolation_overhead:.2f}x the "
+        "N-separate-engines reference — tenancy bookkeeping is no longer cheap"
+    )
+
+    # weighted fair-share under an injected overload burst: capacity is
+    # raised operator-style to 1.5x the observed steady demand right before
+    # the burst batch, so normal load fits and ONLY the burst is over
+    overload_batch = shift_at + 2
+    fmq = MultiQueryEngine(
+        [
+            TenantSpec(f"f{i}", query, t_cfg, weight=2.0 if i == 0 else 1.0)
+            for i in range(n_tenants)
+        ],
+        TenancyPolicy(),
+    )
+    inj2 = FaultInjector(
+        [FaultSpec(kind="tenant_overload", target="tenant", tenant="f2",
+                   batch=overload_batch, rel="R", rows=6000)]
+    )
+    fmq.arm_faults(inj2)
+    for i, batch in enumerate(batches):
+        if i == overload_batch:
+            demand = sum(
+                len(batch[rel.name])
+                * replication_width(fmq.engine(nm).plan, rel.name)
+                for nm in fmq.serving()
+                for rel in query.relations
+            )
+            fmq.fair.capacity = 1.5 * demand
+        fmq.ingest(batch)
+        if i == overload_batch:
+            fmq.fair.capacity = None
+    inj2.assert_all_resolved()
+    shed = dict(fmq.fair.overload_shed)
+    assert shed["f2"] > 0, "the overloaded tenant was never shed"
+    assert shed["f0"] == 0 and shed["f1"] == 0, (
+        f"overload on f2 shed a well-behaved neighbor: {shed}"
+    )
+    for nm in ("f0", "f1"):
+        eng = fmq.engine(nm)
+        assert (eng.total_count, eng.total_checksum) == (count, checksum), (
+            f"tenant {nm} perturbed by f2's overload burst"
+        )
+    contained = inj2.report().contained
+
     # modeled roofline of the fused pass under the final plan (R relation)
     rel = query.relations[0]
     profile = overlap_profile(
@@ -225,6 +355,13 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
     emit("stream_recovery_wall", recovery_us,
          f"mode={rec.mode};replayed={rec.replayed_tuples};"
          f"lost_reducers={rec.lost_reducers};verified={rec.verified}")
+    emit("stream_replan_compile", replan_compile_us,
+         f"steady_median={steady_med:.0f}us;replans={len(replan_ix)}")
+    emit("stream_tenancy_overhead", isolation_overhead * 1000,
+         f"tenants={n_tenants};shared_passes={mq.shared_sketch_passes};"
+         f"private_avoided={solo_private_passes};x1000")
+    emit("stream_tenancy_shed", shed["f2"],
+         f"neighbors={shed['f0']}+{shed['f1']};contained={contained}")
     for i, (bu, fu) in enumerate(zip(base_us, fused_us)):
         replanned = base.reports[i].replanned
         print(f"# batch {i}: baseline {bu / 1e3:8.1f} ms  "
@@ -250,6 +387,13 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
             "fused_speedup": speedup,
             "fused_speedup_vs_recorded": RECORDED_BASELINE_US / fused_med,
             "fused_batches": fused.fused_batches,
+            # replan boundaries with the dense route encoding: overhead of
+            # a replan batch over steady state (planning + migration; a
+            # recompile here trips the 1 s assertion instead of landing
+            # silently in this field)
+            "fused_steady_median_us": steady_med,
+            "replan_compile_us": replan_compile_us,
+            "replan_batches": replan_ix,
             "ingest_us_trend": [
                 {
                     "batch": i,
@@ -290,6 +434,21 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
                 "recovery_boundary_us": recovery_us,
                 "survivors": rec.survivors,
                 "fingerprint_verified": rec.verified,  # also asserted above
+            },
+            "tenancy": {
+                "tenants": n_tenants,
+                "isolation_overhead": isolation_overhead,
+                "mq_median_batch_us": mq_med_us,
+                "solo_median_batch_us": solo_med_us,
+                "mq_wall_us": mq_wall_us,
+                "solo_wall_us": solo_wall_us,
+                "shared_sketch_passes": mq.shared_sketch_passes,
+                "private_sketch_passes_avoided": solo_private_passes,
+                "tenants_bit_identical": True,  # asserted above
+                "overload_batch": overload_batch,
+                "overload_shed_rows": shed,
+                "fair_weights": {"f0": 2.0, "f1": 1.0, "f2": 1.0},
+                "contained_faults": contained,
             },
             "total_count": base.total_count,
             "replan_reasons": [

@@ -20,10 +20,17 @@ right after the drift, and the engine recovers at that batch boundary by
 lineage replay from the retained window — no checkpoint involved — then
 verifies the window fingerprint bit-for-bit.
 
+``--queries N`` demos the multi-tenant engine (DESIGN.md §9): N copies of
+the query run behind ONE shared sketch ingest per relation batch.  A
+poison-pill batch is injected into tenant q1 mid-run — the circuit
+breaker quarantines it while every other tenant stays bit-identical to a
+single-tenant run (verified against the oracle at the end).
+
 Run:  PYTHONPATH=src python examples/streaming_join.py
       PYTHONPATH=src python examples/streaming_join.py --ckpt-dir /tmp/sj
       (kill -TERM the process mid-run, then rerun the same command)
       PYTHONPATH=src python examples/streaming_join.py --kill-reducer 2
+      PYTHONPATH=src python examples/streaming_join.py --queries 3
 """
 import argparse
 import sys
@@ -33,11 +40,15 @@ import numpy as np
 from repro.core import two_way
 from repro.mapreduce import oracle_join
 from repro.stream import (
+    MultiQueryEngine,
     RecoveryPolicy,
     RetentionPolicy,
     StreamConfig,
     StreamingJoinEngine,
+    TenancyPolicy,
+    TenantSpec,
 )
+from repro.testing.faults import FaultInjector, FaultSpec
 from repro.train import PreemptionGuard
 from repro.train.checkpoint import latest_step
 
@@ -51,6 +62,62 @@ def zipf_batch(rng, shift, n_r=1200, n_s=300, domain=3000, a=1.6):
     r = np.stack([rng.integers(0, domain, n_r), b_r], 1).astype(np.int64)
     s = np.stack([b_s, rng.integers(0, domain, n_s)], 1).astype(np.int64)
     return {"R": r, "S": s}
+
+
+def multi_query_demo(n_queries: int) -> int:
+    """N tenants, one shared sketch ingest, poison-pill containment."""
+    query = two_way()
+    config = StreamConfig(q=120, decay=0.5, load_factor=2.0)
+    tenants = [
+        TenantSpec(f"q{i}", query, config, weight=1.0 + (i == 0))
+        for i in range(n_queries)
+    ]
+    mq = MultiQueryEngine(tenants, TenancyPolicy(), log_fn=print)
+    inj = FaultInjector(
+        [FaultSpec(kind="poison_rows", target="tenant", tenant="q1",
+                   batch=4, poison="nan")]
+    )
+    mq.arm_faults(inj)
+    print(f"streaming {query} for {n_queries} tenants; "
+          f"poison-pill hits q1 at batch 4\n")
+
+    rngs = [np.random.default_rng(0)]
+    for _ in range(N_BATCHES):
+        rngs.append(np.random.default_rng(rngs[-1].integers(2**63)))
+    history: list[dict] = []
+    for i in range(N_BATCHES):
+        shift = 0 if i < 4 else 1300
+        batch = zipf_batch(rngs[i], shift)
+        history.append(batch)
+        mq.ingest(batch)
+        states = {nm: st.state for nm, st in mq.status().items()}
+        if states.get("q1") != "RUNNING":
+            print(f"  batch {i}: q1 is {states['q1']} "
+                  f"(others: {sorted(set(states[n] for n in states if n != 'q1'))})")
+
+    full = {
+        nm: np.concatenate([b[nm] for b in history]) for nm in history[0]
+    }
+    count, checksum, _, _ = oracle_join(query, full)
+    # q1 took the poison pill: it was quarantined, reopened, and skipped
+    # the quarantine window — the isolation contract is about everyone ELSE
+    clean = [nm for nm in mq.status() if nm != "q1"]
+    for nm in clean:
+        eng = mq.engine(nm)
+        assert (eng.total_count, eng.total_checksum) == (count, checksum), nm
+        assert eng.sketch_ingest_calls == 0, nm  # never computed privately
+    q1 = mq.engine("q1")
+    assert q1.total_count < count  # it really did miss batches
+    inj.assert_all_resolved()
+    rep = inj.report()
+    print(f"\ntenants: {dict(sorted((nm, st.state) for nm, st in mq.status().items()))}")
+    print(f"shared sketch passes: {mq.shared_sketch_passes} "
+          f"(vs {mq.shared_sketch_passes * n_queries} for {n_queries} "
+          f"separate engines); contained faults: {rep.contained}")
+    print(f"verified: every unaffected tenant bit-identical to the oracle "
+          f"({count} results, checksum {checksum:#010x}); q1 skipped its "
+          f"quarantine window ({q1.total_count} results)")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -68,7 +135,20 @@ def main(argv=None) -> int:
         help="kill this reducer host (0-7) right after the drift and "
         "recover in-flight by lineage replay (DESIGN.md §5)",
     )
+    parser.add_argument(
+        "--queries",
+        type=int,
+        default=None,
+        metavar="N",
+        help="run N tenant queries behind one shared sketch ingest and "
+        "demo poison-pill containment (DESIGN.md §9)",
+    )
     args = parser.parse_args(argv)
+
+    if args.queries is not None:
+        if args.queries < 2:
+            parser.error("--queries needs N >= 2")
+        return multi_query_demo(args.queries)
 
     query = two_way()
     if args.kill_reducer is not None:

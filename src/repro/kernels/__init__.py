@@ -3,7 +3,9 @@
   * ``histogram`` — heavy-hitter detection (one-hot block counting)
   * ``cms_update`` — streaming Count-Min sketch increment (HH tracking)
   * ``fused_ingest`` — fused streaming ingest: map-keys + sketch + pack
-    plan in one double-buffered pass (DESIGN.md §7)
+    plan in one double-buffered pass (DESIGN.md §7); ``fused_ingest_dense``
+    takes the route table as dynamic operands so drift replans reuse the
+    compiled executable (no per-replan recompile)
   * ``reducer_join`` / ``flat_join`` — reduce-phase block equi-join
   * ``flash_attention`` — LM prefill attention (online softmax, GQA)
 
@@ -16,6 +18,7 @@ from .ops import (
     flash_attention,
     flat_join,
     fused_ingest,
+    fused_ingest_dense,
     histogram,
     reducer_join,
 )
@@ -25,6 +28,7 @@ __all__ = [
     "flash_attention",
     "flat_join",
     "fused_ingest",
+    "fused_ingest_dense",
     "histogram",
     "reducer_join",
 ]

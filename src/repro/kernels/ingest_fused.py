@@ -319,6 +319,322 @@ def fused_ingest_pallas(
     return dest, rank, counts, cms
 
 
+# ---- dynamic-route variant (replan-stable compile cache) -------------------
+#
+# ``fused_ingest_pallas`` bakes the route table into the compiled kernel as
+# a static argument: correct, but every drift replan produces a new table
+# and therefore a full recompile (~seconds) on the ingest critical path —
+# the batch-0/5 spikes in BENCH_stream.json.  The dense variant passes the
+# SAME routing recipe as data: per padded output column, a base offset plus
+# padded per-attr (seed, dim, stride) hash terms, pin equalities, and
+# exclude lists, all as int32 arrays.  Only the *padded shapes* are static
+# — (W_pad, H, P, V) derived from the relation arity and the config's HH
+# cap — so replans that stay within the same power-of-two replication
+# bucket reuse the compiled executable and pay microseconds, not seconds.
+# Column selection uses one-hot iota comparisons (no data-dependent gather,
+# Pallas-safe) and the arithmetic is term-for-term identical to
+# ``_dest_block``, so destinations stay bit-identical to ``map_phase``.
+
+def dense_route_encoding(
+    routes: RouteTable,
+    arity: int,
+    w_pad: int,
+    max_values: int,
+) -> dict:
+    """Encode a static route table as dense int32 arrays (dynamic operands).
+
+    Shapes: per padded flat column ``w < w_pad`` (real columns first, in
+    ``_dest_block``'s residual-major/replica-minor order):
+
+      * ``col_base [Wp]``   — residual offset + replica offset (0 padded)
+      * ``col_valid [Wp]``  — 1 for real columns
+      * ``h_col/h_seed/h_dim/h_stride [Wp, H]`` — hashed-attr terms, padded
+        with (0, 0, 1, 0) so a padded slot contributes bucket 0 * stride 0
+      * ``p_col/p_val/p_on [Wp, P]`` — pin equalities (``p_on=0`` ignored)
+      * ``e_col [Wp, P]``, ``e_val/e_on [Wp, P, V]`` — exclude lists
+
+    ``H = P = arity`` (a residual can hash/pin/exclude at most every
+    attribute) and ``V = max_values`` must bound the per-attr exclude list
+    (the planner's ``max_hh_per_attr``); violations raise rather than
+    silently truncate.
+    """
+    import numpy as np
+
+    w = route_width(routes)
+    if w > w_pad:
+        raise ValueError(f"w_pad {w_pad} < route width {w}")
+    H = P = max(1, arity)
+    V = max(1, max_values)
+    enc = {
+        "col_base": np.zeros(w_pad, np.int32),
+        "col_valid": np.zeros(w_pad, np.int32),
+        "h_col": np.zeros((w_pad, H), np.int32),
+        "h_seed": np.zeros((w_pad, H), np.int32),
+        "h_dim": np.ones((w_pad, H), np.int32),
+        "h_stride": np.zeros((w_pad, H), np.int32),
+        "p_col": np.zeros((w_pad, P), np.int32),
+        "p_val": np.zeros((w_pad, P), np.int32),
+        "p_on": np.zeros((w_pad, P), np.int32),
+        "e_col": np.zeros((w_pad, P), np.int32),
+        "e_val": np.zeros((w_pad, P, V), np.int32),
+        "e_on": np.zeros((w_pad, P, V), np.int32),
+    }
+    col = 0
+    for offset, hashed, rep, pins, excludes in routes:
+        if len(hashed) > H or len(pins) > P or len(excludes) > P:
+            raise ValueError(
+                f"route terms exceed arity padding {H}: "
+                f"{len(hashed)} hashed / {len(pins)} pins / "
+                f"{len(excludes)} excludes"
+            )
+        for r_off in rep:
+            enc["col_base"][col] = offset + r_off
+            enc["col_valid"][col] = 1
+            for j, (c, seed, dim, stride) in enumerate(hashed):
+                enc["h_col"][col, j] = c
+                enc["h_seed"][col, j] = np.int32(np.uint32(seed))
+                enc["h_dim"][col, j] = dim
+                enc["h_stride"][col, j] = stride
+            for j, (c, value) in enumerate(pins):
+                enc["p_col"][col, j] = c
+                enc["p_val"][col, j] = value
+                enc["p_on"][col, j] = 1
+            for j, (c, values) in enumerate(excludes):
+                if len(values) > V:
+                    raise ValueError(
+                        f"exclude list ({len(values)}) exceeds max_values "
+                        f"padding ({V}); raise the pad_values hint"
+                    )
+                enc["e_col"][col, j] = c
+                for v_i, hv in enumerate(values):
+                    enc["e_val"][col, j, v_i] = hv
+                    enc["e_on"][col, j, v_i] = 1
+            col += 1
+    return enc
+
+
+_ENC_KEYS = (
+    "col_base", "col_valid", "h_col", "h_seed", "h_dim", "h_stride",
+    "p_col", "p_val", "p_on", "e_col", "e_val", "e_on",
+)
+
+
+def _dest_block_dense(rows, msk, enc):
+    """[B, Wp] destination ids from the dense encoding (−1 = not emitted).
+
+    Same math as ``_dest_block``, vectorized over padded columns; column
+    selection is a one-hot multiply against an arity iota (no gather)."""
+    b, arity = rows.shape
+    wp, h = enc["h_col"].shape
+    v = enc["e_val"].shape[2]
+
+    def select(cols):  # cols [Wp, T] -> values [B, Wp, T]
+        t = cols.shape[1]
+        oh = (
+            cols[:, :, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (wp, t, arity), 2)
+        ).astype(jnp.int32)
+        return (rows[:, None, None, :] * oh[None]).sum(-1)
+
+    hv = select(enc["h_col"])  # [B, Wp, H]
+    bucket = (
+        _mix32(hv, enc["h_seed"][None])
+        % enc["h_dim"][None].astype(jnp.uint32)
+    ).astype(jnp.int32)
+    base = enc["col_base"][None, :] + (bucket * enc["h_stride"][None]).sum(-1)
+
+    pv = select(enc["p_col"])  # [B, Wp, P]
+    pin_ok = ((pv == enc["p_val"][None]) | (enc["p_on"][None] == 0)).all(-1)
+
+    ev = select(enc["e_col"])  # [B, Wp, P]
+    bad = (
+        (ev[:, :, :, None] == enc["e_val"][None])
+        & (enc["e_on"][None] != 0)
+    ).any((-1, -2))
+
+    ok = msk[:, None] & (enc["col_valid"][None] != 0) & pin_ok & ~bad
+    return jnp.where(ok, base, jnp.int32(-1))
+
+
+def _fused_grid_kernel_dense(
+    rows_ref, *refs, with_sketch, sketch_cols, seeds, width, k_pad
+):
+    enc = {k: r[...] for k, r in zip(_ENC_KEYS, refs[: len(_ENC_KEYS)])}
+    dest_ref, rank_ref, counts_ref, cms_ref = _unpack_refs(
+        refs[len(_ENC_KEYS):], with_route=True, with_sketch=with_sketch
+    )
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        if cms_ref is not None:
+            cms_ref[...] = jnp.zeros_like(cms_ref)
+
+    blk = rows_ref[...]
+    rows, msk = blk[:, :-1], blk[:, -1] != 0
+    if cms_ref is not None:
+        cms_ref[...] += _cms_block(rows, msk, sketch_cols, seeds, width)
+    dest = _dest_block_dense(rows, msk, enc)
+    rank, delta = _rank_counts_block(dest, counts_ref[...], k_pad)
+    dest_ref[...] = dest
+    rank_ref[...] = rank
+    counts_ref[...] += delta
+
+
+def _fused_dma_kernel_dense(
+    rows_hbm, *refs, with_sketch, sketch_cols, seeds, width, k_pad, block,
+    nsteps,
+):
+    enc = {k: r[...] for k, r in zip(_ENC_KEYS, refs[: len(_ENC_KEYS)])}
+    dest_ref, rank_ref, counts_ref, cms_ref = _unpack_refs(
+        refs[len(_ENC_KEYS):], with_route=True, with_sketch=with_sketch
+    )
+    counts_ref[...] = jnp.zeros_like(counts_ref)
+    if cms_ref is not None:
+        cms_ref[...] = jnp.zeros_like(cms_ref)
+
+    def body(scratch, sem):
+        def get_dma(slot, i):
+            return pltpu.make_async_copy(
+                rows_hbm.at[pl.ds(i * block, block), :],
+                scratch.at[slot],
+                sem.at[slot],
+            )
+
+        get_dma(0, 0).start()
+
+        def step(i, _):
+            cur, nxt = i % 2, (i + 1) % 2
+
+            @pl.when(i + 1 < nsteps)
+            def _prefetch():
+                get_dma(nxt, i + 1).start()
+
+            get_dma(cur, i).wait()
+            blk = scratch[cur]
+            rows, msk = blk[:, :-1], blk[:, -1] != 0
+            if cms_ref is not None:
+                cms_ref[...] += _cms_block(rows, msk, sketch_cols, seeds, width)
+            dest = _dest_block_dense(rows, msk, enc)
+            rank, delta = _rank_counts_block(dest, counts_ref[...], k_pad)
+            dest_ref[pl.ds(i * block, block), :] = dest
+            rank_ref[pl.ds(i * block, block), :] = rank
+            counts_ref[...] += delta
+            return _
+
+        jax.lax.fori_loop(0, nsteps, step, None)
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((2, block, rows_hbm.shape[1]), jnp.int32),
+        sem=pltpu.SemaphoreType.DMA((2,)),
+    )
+
+
+def fused_ingest_dense_pallas(
+    rows: jnp.ndarray,  # [N, arity] int32
+    enc: dict,  # dense_route_encoding arrays (dynamic operands)
+    sketch_cols: tuple[int, ...] = (),
+    seeds: tuple[int, ...] = (),
+    width: int = 2048,
+    k_pad: int = 128,
+    block: int = 256,
+    interpret: bool | None = None,
+    double_buffer: bool = True,
+):
+    """``fused_ingest_pallas`` with the routes as data, not code.
+
+    Returns padded ``(dest [N_pad, Wp], rank [N_pad, Wp], counts [k_pad],
+    cms [n_cols, depth, width] | None)`` — the caller slices to the real
+    (N, W, K), which live outside the compile cache on purpose.  The only
+    static inputs are padded shapes and the sketch signature, so replans
+    within the same (Wp, k_pad) bucket hit the compiled executable.
+
+    ``k_pad`` MUST be >= the plan's total reducers: destination ids are
+    dynamic, so a too-small histogram cannot be detected at trace time and
+    silently corrupts counts/ranks (the engine rounds total_reducers up to
+    a 128 multiple in ``_dense_routes``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n, arity = rows.shape
+    wp = enc["col_base"].shape[0]
+    depth = len(seeds)
+    n_cols = len(sketch_cols)
+
+    block = int(block)
+    while block > 8 and block * wp > 1024:
+        block //= 2
+    n_pad = max(_round_up(n, block), block)
+
+    mask = jnp.ones((n,), jnp.int32)
+    rows_aug = jnp.concatenate([rows.astype(jnp.int32), mask[:, None]], axis=1)
+    if n_pad != n:
+        rows_aug = jnp.concatenate(
+            [rows_aug, jnp.zeros((n_pad - n, arity + 1), jnp.int32)]
+        )
+    nsteps = n_pad // block
+    enc_arrays = [jnp.asarray(enc[k], jnp.int32) for k in _ENC_KEYS]
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((n_pad, wp), jnp.int32),  # dest
+        jax.ShapeDtypeStruct((n_pad, wp), jnp.int32),  # rank
+        jax.ShapeDtypeStruct((k_pad,), jnp.int32),  # counts
+    ]
+    out_specs = [
+        pl.BlockSpec((block, wp), lambda i: (i, 0)),
+        pl.BlockSpec((block, wp), lambda i: (i, 0)),
+        pl.BlockSpec((k_pad,), lambda i: (0,)),
+    ]
+    if sketch_cols:
+        out_shapes.append(
+            jax.ShapeDtypeStruct((n_cols * depth, width), jnp.int32)
+        )
+        out_specs.append(pl.BlockSpec((n_cols * depth, width), lambda i: (0, 0)))
+
+    common = dict(
+        with_sketch=bool(sketch_cols), sketch_cols=sketch_cols,
+        seeds=tuple(seeds), width=width, k_pad=k_pad,
+    )
+    if double_buffer:
+        outs = pl.pallas_call(
+            functools.partial(
+                _fused_dma_kernel_dense, block=block, nsteps=nsteps, **common
+            ),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)]
+            + [pl.BlockSpec(memory_space=pltpu.VMEM) for _ in enc_arrays],
+            out_specs=tuple(
+                pl.BlockSpec(memory_space=pltpu.VMEM) for _ in out_shapes
+            ),
+            out_shape=tuple(out_shapes),
+            interpret=interpret,
+        )(rows_aug, *enc_arrays)
+    else:
+        outs = pl.pallas_call(
+            functools.partial(_fused_grid_kernel_dense, **common),
+            grid=(nsteps,),
+            in_specs=[pl.BlockSpec((block, arity + 1), lambda i: (i, 0))]
+            + [
+                pl.BlockSpec(a.shape, _zero_index_map(a.ndim))
+                for a in enc_arrays
+            ],
+            out_specs=tuple(out_specs),
+            out_shape=tuple(out_shapes),
+            interpret=interpret,
+        )(rows_aug, *enc_arrays)
+
+    outs = list(outs)
+    cms = None
+    if sketch_cols:
+        cms = outs[-1].reshape(n_cols, depth, width)
+    return outs[0], outs[1], outs[2], cms
+
+
+def _zero_index_map(ndim: int):
+    return lambda i, _nd=ndim: (0,) * _nd
+
+
 # ---- roofline / overlap model (DESIGN.md §7) -------------------------------
 # Per-chip numbers for a TPU v5e-class part; the model is about orders of
 # magnitude, not decimal places.

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from .block_join import block_join_pallas, tiled_join_pallas
 from .flash_attention import flash_attention_pallas
 from .histogram import histogram_pallas
-from .ingest_fused import fused_ingest_pallas
+from .ingest_fused import fused_ingest_dense_pallas, fused_ingest_pallas
 from .sketch_update import cms_update_pallas
 
 
@@ -60,6 +60,42 @@ def fused_ingest(
         seeds=seeds,
         width=width,
         num_reducers=num_reducers,
+        block=block,
+        double_buffer=double_buffer,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "sketch_cols", "seeds", "width", "k_pad", "block", "double_buffer",
+    ),
+)
+def fused_ingest_dense(
+    rows: jnp.ndarray,
+    enc: dict,
+    *,
+    sketch_cols: tuple[int, ...] = (),
+    seeds: tuple[int, ...] = (),
+    width: int = 2048,
+    k_pad: int = 128,
+    block: int = 256,
+    double_buffer: bool = True,
+):
+    """Fused ingest with the route table as DYNAMIC operands (``enc`` from
+    ``ingest_fused.dense_route_encoding``).  Only padded shapes and the
+    sketch signature are static, so a drift replan that keeps the same
+    (W_pad, k_pad) bucket reuses the compiled executable instead of paying
+    a multi-second recompile (the BENCH_stream replan spike).  Returns
+    PADDED ``(dest, rank, counts, cms)`` — slice to the real (N, W, K)
+    outside this jit boundary."""
+    return fused_ingest_dense_pallas(
+        rows,
+        enc,
+        sketch_cols=sketch_cols,
+        seeds=seeds,
+        width=width,
+        k_pad=k_pad,
         block=block,
         double_buffer=double_buffer,
     )

@@ -27,8 +27,12 @@ def mix32_np(x: np.ndarray, seed: int) -> np.ndarray:
     return x
 
 
-def mix32_jnp(x: jnp.ndarray, seed: int) -> jnp.ndarray:
-    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+def mix32_jnp(x: jnp.ndarray, seed) -> jnp.ndarray:
+    """``seed`` may be a Python int or a (broadcastable) int array — the
+    dense fused-ingest kernel passes per-column seed planes."""
+    if isinstance(seed, int):
+        seed = np.uint32(seed)  # ints can exceed int32; wrap before tracing
+    x = x.astype(jnp.uint32) ^ jnp.asarray(seed).astype(jnp.uint32)
     x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
     x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
     x = x ^ (x >> 16)

@@ -15,12 +15,17 @@ replanning (DESIGN.md §6; fused ingest hot path: §7; bounded state: §8).
   * ``recovery``  — reducer-loss recovery: host placement + heartbeat
     detection, lineage replay of lost reducer state, plan repair onto
     survivors, elastic degraded mode (DESIGN.md §5)
+  * ``tenancy``   — multi-tenant engine: N queries behind one ingest with
+    shared sketch passes, per-query circuit breakers, weighted fair-share
+    overload shedding, tenant-scoped recovery (DESIGN.md §9)
 """
 from .admission import (
     AdmissionController,
     AdmissionDecision,
     AdmissionPolicy,
+    FairShareController,
     replication_width,
+    weighted_fair_allocation,
 )
 from .drift import DriftDecision, DriftMonitor, plan_comm_on_batch, predicted_loads
 from .engine import BatchReport, StreamConfig, StreamingJoinEngine
@@ -38,13 +43,38 @@ from .retention import (
     select_reducers,
     zero_reducers,
 )
-from .sketch import DecayingCountMin, HHSnapshot, SpaceSaving, StreamHHTracker
+from .sketch import (
+    DecayingCountMin,
+    HHSnapshot,
+    SpaceSaving,
+    StreamHHTracker,
+    cms_delta,
+)
+from .tenancy import (
+    DEGRADED,
+    FAILED,
+    QUARANTINED,
+    RUNNING,
+    MultiQueryEngine,
+    TenancyPolicy,
+    TenantSpec,
+    TenantStatus,
+)
 
 __all__ = [
     "AdmissionController",
     "AdmissionDecision",
     "AdmissionPolicy",
     "BatchReport",
+    "DEGRADED",
+    "FAILED",
+    "FairShareController",
+    "MultiQueryEngine",
+    "QUARANTINED",
+    "RUNNING",
+    "TenancyPolicy",
+    "TenantSpec",
+    "TenantStatus",
     "DecayingCountMin",
     "DriftDecision",
     "DriftMonitor",
@@ -59,11 +89,13 @@ __all__ = [
     "StreamingJoinEngine",
     "StreamHHTracker",
     "carried_tuples",
+    "cms_delta",
     "lost_occupancy",
     "plan_comm_on_batch",
     "predicted_loads",
     "remove_prefix",
     "replication_width",
     "select_reducers",
+    "weighted_fair_allocation",
     "zero_reducers",
 ]

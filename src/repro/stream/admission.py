@@ -33,6 +33,7 @@ so the §6 baseline behavior is unchanged unless configured.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Mapping
 
 import numpy as np
@@ -51,10 +52,16 @@ class AdmissionPolicy:
     min_admit: int = 32  # never starve a relation below this many rows
 
     def __post_init__(self):
-        if self.headroom is not None and self.headroom <= 0:
-            raise ValueError("headroom must be > 0")
+        if self.headroom is not None and (
+            not math.isfinite(self.headroom) or self.headroom <= 0
+        ):
+            raise ValueError(
+                f"headroom must be finite and > 0, got {self.headroom}"
+            )
         if self.max_backlog_rows < 0:
             raise ValueError("max_backlog_rows must be >= 0")
+        if self.min_admit < 1:
+            raise ValueError("min_admit must be >= 1")
 
     @property
     def enabled(self) -> bool:
@@ -93,6 +100,11 @@ class AdmissionController:
     """Stateless budget math + stateful FIFO backlog per relation."""
 
     def __init__(self, policy: AdmissionPolicy, query: JoinQuery, q: float):
+        if not math.isfinite(q) or q <= 0:
+            raise ValueError(
+                f"admission needs a finite positive capacity q, got {q} "
+                "(a zero/NaN q would silently zero every budget)"
+            )
         self.policy = policy
         self.query = query
         self.q = float(q)
@@ -110,7 +122,11 @@ class AdmissionController:
 
     def set_capacity(self, factor: float) -> None:
         """Clamp admission to ``factor`` x the healthy-cluster budget
-        (0 < factor <= 1; 1.0 restores full capacity)."""
+        (0 < factor <= 1; 1.0 restores full capacity).  NaN and
+        non-positive factors are rejected loudly — a NaN would otherwise
+        poison every subsequent budget into ``min_admit`` floor values."""
+        if not math.isfinite(factor):
+            raise ValueError(f"capacity factor must be finite, got {factor}")
         if not 0.0 < factor <= 1.0:
             raise ValueError(f"capacity factor must be in (0, 1], got {factor}")
         self.capacity_factor = float(factor)
@@ -190,3 +206,128 @@ class AdmissionController:
         self.total_shed = int(totals[1])
         if "capacity" in state:  # absent in pre-recovery checkpoints
             self.capacity_factor = float(np.asarray(state["capacity"])[0])
+
+
+# ---- multi-tenant fair share (DESIGN.md §9) --------------------------------
+def weighted_fair_allocation(
+    demands: Mapping[str, float],
+    weights: Mapping[str, float],
+    capacity: float,
+) -> dict[str, float]:
+    """Weighted max-min fair allocation (water-filling).
+
+    Splits ``capacity`` (in the same units as ``demands`` — the engine uses
+    predicted reducer arrivals, rows x replication width) across tenants:
+    a tenant whose demand fits under its weighted share keeps ALL of it,
+    and the freed surplus is re-divided among the still-hungry tenants by
+    weight.  The classic invariants hold: no tenant gets more than its
+    demand, the allocation is work-conserving (sum == min(capacity, total
+    demand)), and when aggregate demand fits, allocation == demand for
+    everyone — overload control is invisible until there is overload.
+    """
+    if not math.isfinite(capacity) or capacity < 0:
+        raise ValueError(f"capacity must be finite and >= 0, got {capacity}")
+    for t, w in weights.items():
+        if not math.isfinite(w) or w <= 0:
+            raise ValueError(f"tenant {t!r} weight must be finite > 0, got {w}")
+    for t, d in demands.items():
+        if not math.isfinite(d) or d < 0:
+            raise ValueError(f"tenant {t!r} demand must be finite >= 0, got {d}")
+    alloc = {t: 0.0 for t in demands}
+    active = sorted(t for t in demands if demands[t] > 0)
+    remaining = float(capacity)
+    while active and remaining > 1e-12:
+        wsum = sum(weights.get(t, 1.0) for t in active)
+        share = {t: remaining * weights.get(t, 1.0) / wsum for t in active}
+        satisfied = [t for t in active if demands[t] - alloc[t] <= share[t]]
+        if not satisfied:
+            for t in active:
+                alloc[t] += share[t]
+            break
+        for t in satisfied:
+            take = demands[t] - alloc[t]
+            alloc[t] = demands[t]
+            remaining -= take
+        active = [t for t in active if t not in satisfied]
+    return alloc
+
+
+class FairShareController:
+    """Aggregate overload control across tenants (DESIGN.md §9).
+
+    Each batch, every tenant's *demand* is its offered rows weighted by the
+    replication width of its live plan (the per-query communication budget
+    of Beame-Koutris-Suciu: what the tenant will actually ship).  When the
+    aggregate demand exceeds ``capacity`` predicted arrivals per batch, the
+    weighted max-min allocation above decides who is trimmed; tenants under
+    their fair share are never touched, so overload on one tenant cannot
+    perturb a well-behaved neighbor's rows (the isolation contract the
+    tenancy tests assert bit-for-bit).  Trimming is counted per tenant as
+    ``overload_shed`` rows plus a ``backpressure`` event per trimmed batch
+    — exact counters, same contract as ``AdmissionController``.
+
+    ``capacity=None`` disables aggregate control (every tenant admitted in
+    full; per-tenant ``AdmissionController``s still apply downstream).
+    """
+
+    def __init__(
+        self,
+        capacity: float | None,
+        weights: Mapping[str, float],
+    ):
+        if capacity is not None and (
+            not math.isfinite(capacity) or capacity <= 0
+        ):
+            raise ValueError(
+                f"aggregate capacity must be finite and > 0, got {capacity}"
+            )
+        for t, w in weights.items():
+            if not math.isfinite(w) or w <= 0:
+                raise ValueError(
+                    f"tenant {t!r} weight must be finite > 0, got {w}"
+                )
+        self.capacity = None if capacity is None else float(capacity)
+        self.weights = {t: float(w) for t, w in weights.items()}
+        self.overload_shed: dict[str, int] = {t: 0 for t in weights}
+        self.backpressure: dict[str, int] = {t: 0 for t in weights}
+
+    def fractions(self, demands: Mapping[str, float]) -> dict[str, float]:
+        """Admitted fraction per tenant for one batch (1.0 = untrimmed)."""
+        if self.capacity is None:
+            return {t: 1.0 for t in demands}
+        total = sum(demands.values())
+        if total <= self.capacity:
+            return {t: 1.0 for t in demands}
+        alloc = weighted_fair_allocation(demands, self.weights, self.capacity)
+        return {
+            t: (alloc[t] / demands[t]) if demands[t] > 0 else 1.0
+            for t in demands
+        }
+
+    def record_trim(self, tenant: str, rows_trimmed: int) -> None:
+        if rows_trimmed > 0:
+            self.overload_shed[tenant] = (
+                self.overload_shed.get(tenant, 0) + int(rows_trimmed)
+            )
+            self.backpressure[tenant] = self.backpressure.get(tenant, 0) + 1
+
+    # ---- checkpoint --------------------------------------------------------
+    def state_dict(self) -> dict[str, np.ndarray]:
+        names = sorted(self.weights)
+        return {
+            "shed": np.array(
+                [self.overload_shed.get(t, 0) for t in names], np.int64
+            ),
+            "backpressure": np.array(
+                [self.backpressure.get(t, 0) for t in names], np.int64
+            ),
+        }
+
+    def load_state_dict(self, state: Mapping[str, np.ndarray]) -> None:
+        names = sorted(self.weights)
+        shed = np.asarray(state["shed"])
+        bp = np.asarray(state["backpressure"])
+        if shed.size != len(names) or bp.size != len(names):
+            raise ValueError("fair-share checkpoint tenant count mismatch")
+        self.overload_shed = {t: int(s) for t, s in zip(names, shed)}
+        self.backpressure = {t: int(b) for t, b in zip(names, bp)}

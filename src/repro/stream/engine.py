@@ -123,6 +123,12 @@ class StreamConfig:
     fused_ingest: bool = False
     fused_block: int = 256  # tuple block per grid step / DMA slot
     fused_double_buffer: bool = True  # explicit DMA double buffering
+    # Route the fused pass through the dense (dynamic-operand) route
+    # encoding: only padded shapes are jit-static, so a drift replan that
+    # keeps the same (W_pad, k_pad) bucket reuses the compiled executable
+    # instead of paying a multi-second recompile on the replan batch.
+    # Bit-identical to the static-route variant.
+    fused_dynamic_routes: bool = True
     # Bounded state (DESIGN.md §8): both default to off, reproducing the
     # unbounded §6 baseline bit-for-bit.
     retention: RetentionPolicy = RetentionPolicy()
@@ -262,6 +268,13 @@ class StreamingJoinEngine:
 
         self.total_count = 0
         self.total_checksum = 0
+        # sketch passes THIS engine computed itself (multi-tenant sharing:
+        # an engine absorbing shared increments never bumps this — the
+        # tenancy tests assert the shared pass ran once per relation batch)
+        self.sketch_ingest_calls = 0
+        # recovery-domain label: "" single-tenant; MultiQueryEngine sets it
+        # so tenant-scoped host faults fire only in the victim's engine
+        self.tenant = ""
         self.window_count = 0  # fingerprint of the retained window
         self.window_checksum = 0
         self.cumulative_comm = 0
@@ -306,6 +319,11 @@ class StreamingJoinEngine:
             for rel in query.relations
         }
         self.fused_batches = 0
+        # dense route-encoding cache (fused_dynamic_routes): rebuilt per
+        # plan epoch; the padded width is a per-relation high-water mark so
+        # an oscillating replan width cannot thrash the jit cache
+        self._dense_enc: dict[str, tuple] = {}
+        self._dense_wp: dict[str, int] = {}
         # merge-join delta index (DESIGN.md §7): exact sorted-key evaluation
         # of the telescoping terms for binary single-column joins, replacing
         # the dense einsum whose cost is padded to the hottest reducer bin.
@@ -317,6 +335,58 @@ class StreamingJoinEngine:
         )
 
     # ---- internals ---------------------------------------------------------
+    def _validate_batch(
+        self, batch: dict[str, np.ndarray]
+    ) -> dict[str, np.ndarray]:
+        """Schema-validate one offered batch BEFORE any state mutation.
+
+        The containment contract for multi-tenant quarantine (DESIGN.md
+        §9): a poison-pill batch (missing relation, wrong arity, NaN,
+        values outside the int32 routing domain) raises ``ValueError``
+        here, with the engine untouched — no backlog mutated, no window
+        expired, no sketch decayed — so a circuit-breaker reopen can
+        safely retry the next batch on the same engine."""
+        out = {}
+        for r in self.query.relations:
+            if r.name not in batch:
+                raise ValueError(
+                    f"poisoned batch: missing relation {r.name!r}"
+                )
+            rows = np.asarray(batch[r.name])
+            if rows.dtype == object or not (
+                np.issubdtype(rows.dtype, np.integer)
+                or np.issubdtype(rows.dtype, np.floating)
+            ):
+                raise ValueError(
+                    f"poisoned batch: relation {r.name!r} has non-numeric "
+                    f"dtype {rows.dtype}"
+                )
+            if rows.ndim == 2 and rows.shape[1] != r.arity:
+                raise ValueError(
+                    f"poisoned batch: relation {r.name!r} rows have "
+                    f"{rows.shape[1]} columns, schema arity is {r.arity}"
+                )
+            if rows.ndim > 2 or (rows.ndim < 2 and rows.size % r.arity):
+                raise ValueError(
+                    f"poisoned batch: relation {r.name!r} shape "
+                    f"{rows.shape} does not pack into arity {r.arity}"
+                )
+            if np.issubdtype(rows.dtype, np.floating):
+                if rows.size and not np.isfinite(rows).all():
+                    raise ValueError(
+                        f"poisoned batch: relation {r.name!r} contains "
+                        "non-finite values"
+                    )
+            if rows.size:
+                lo, hi = rows.min(), rows.max()
+                if hi >= 2**31 or lo < -(2**31):
+                    raise ValueError(
+                        f"poisoned batch: relation {r.name!r} values "
+                        f"[{lo}, {hi}] leave the int32 routing domain"
+                    )
+            out[r.name] = rows.reshape(-1, r.arity)
+        return out
+
     def _threshold(self) -> float:
         t = self.config.hh_threshold
         return float(self.config.q if t is None else t)
@@ -337,6 +407,27 @@ class StreamingJoinEngine:
         ok = flat_dest >= 0
         return flat_dest[ok].astype(np.int32), flat_rows[ok]
 
+    def _dense_routes(self, rel, routes: tuple):
+        """(enc, real_width, k_pad) for the dense fused pass, cached per
+        plan epoch.  The padded route width only ever grows (per-relation
+        high-water mark), so successive replans whose real width fits the
+        same power-of-two bucket hit the identical compiled executable."""
+        from repro.kernels.ingest_fused import dense_route_encoding, route_width
+
+        cached = self._dense_enc.get(rel.name)
+        if cached is not None and cached[0] == self.plan_epoch:
+            return cached[1], cached[2], cached[3]
+        w = route_width(routes)
+        wp = max(_pow2(max(w, 1)), self._dense_wp.get(rel.name, 1))
+        self._dense_wp[rel.name] = wp
+        k_pad = max(-(-self.plan.total_reducers // 128) * 128, 128)
+        enc = dense_route_encoding(
+            routes, rel.arity, wp,
+            max_values=max(1, self.config.max_hh_per_attr),
+        )
+        self._dense_enc[rel.name] = (self.plan_epoch, enc, w, k_pad)
+        return enc, w, k_pad
+
     def _fused_pass(
         self, rel, rows: np.ndarray, with_route: bool, with_sketch: bool
     ) -> tuple[_Routed | None, dict[str, np.ndarray] | None]:
@@ -344,7 +435,7 @@ class StreamingJoinEngine:
 
         Returns (routed emissions under the CURRENT plan if ``with_route``,
         per-attr Count-Min table increments if ``with_sketch``)."""
-        from repro.kernels import fused_ingest
+        from repro.kernels import fused_ingest, fused_ingest_dense
 
         arity = rows.shape[1]
         cols = self._sketch_cols[rel.name] if with_sketch else ()
@@ -367,16 +458,35 @@ class StreamingJoinEngine:
                 zero_deltas if with_sketch else None
             )
 
-        dest, rank, counts, cms = fused_ingest(
-            jnp.asarray(rows.astype(np.int32)),
-            routes=routes,
-            sketch_cols=tuple(c for _, c in cols),
-            seeds=seeds,
-            width=width,
-            num_reducers=k,
-            block=self.config.fused_block,
-            double_buffer=self.config.fused_double_buffer,
-        )
+        if routes and self.config.fused_dynamic_routes:
+            enc, w_real, k_pad = self._dense_routes(rel, routes)
+            dest, rank, counts, cms = fused_ingest_dense(
+                jnp.asarray(rows.astype(np.int32)),
+                enc,
+                sketch_cols=tuple(c for _, c in cols),
+                seeds=seeds,
+                width=width,
+                k_pad=k_pad,
+                block=self.config.fused_block,
+                double_buffer=self.config.fused_double_buffer,
+            )
+            # the dense kernel returns padded (N_pad, W_pad, k_pad) shapes
+            # so the executable survives replans; slice to real sizes here
+            n = rows.shape[0]
+            dest = np.asarray(dest)[:n, :w_real]
+            rank = np.asarray(rank)[:n, :w_real]
+            counts = np.asarray(counts)[:k]
+        else:
+            dest, rank, counts, cms = fused_ingest(
+                jnp.asarray(rows.astype(np.int32)),
+                routes=routes,
+                sketch_cols=tuple(c for _, c in cols),
+                seeds=seeds,
+                width=width,
+                num_reducers=k,
+                block=self.config.fused_block,
+                double_buffer=self.config.fused_double_buffer,
+            )
         routed = None
         if with_route:
             dest, rank = np.asarray(dest), np.asarray(rank)
@@ -826,6 +936,7 @@ class StreamingJoinEngine:
             migrated_tuples=migrated,
             reducers_before=reducers_before,
             reducers_after=self.plan.total_reducers if self.plan else 0,
+            tenant=self.tenant,
             verified=verified,
         )
         self.recoveries.append(report)
@@ -852,7 +963,7 @@ class StreamingJoinEngine:
                 f"{healed} rejoin as empty spares"
             )
         if self._fault_injector is not None:
-            for ev in self._fault_injector.fire_host_faults(bid):
+            for ev in self._fault_injector.fire_host_faults(bid, self.tenant):
                 s = ev.spec
                 heal = None if s.kind == "host_loss" else bid + s.heal_after
                 hosts.silence(s.host_id, heal)
@@ -964,18 +1075,33 @@ class StreamingJoinEngine:
         return d_count, d_checksum
 
     # ---- public API --------------------------------------------------------
-    def ingest(self, batch: dict[str, np.ndarray]) -> BatchReport:
-        """Process one micro-batch; returns its telemetry."""
+    def ingest(
+        self,
+        batch: dict[str, np.ndarray],
+        *,
+        shared_deltas: dict[tuple[str, str], np.ndarray] | None = None,
+    ) -> BatchReport:
+        """Process one micro-batch; returns its telemetry.
+
+        ``shared_deltas`` (multi-tenant mode, DESIGN.md §9): Count-Min
+        table increments precomputed ONCE over this exact offered batch by
+        a ``MultiQueryEngine`` shared ingest pass, keyed ``(attr,
+        rel_name)``.  They are absorbed instead of running this engine's
+        own sketch pass — bit-identical (integer counts are exact in
+        float64) — but ONLY when the admitted rows equal the offered rows
+        (empty backlog, nothing deferred or shed); a throttled tenant's
+        sketch must see its own admitted subset, so it falls back to a
+        private pass.
+        """
         if self._exhausted:
             raise RecoveryExhaustedError(
                 "engine lost more hosts than the survivable grid; carried "
                 "state is unrecoverable and ingest refuses to produce "
                 "answers from it"
             )
-        offered = {
-            r.name: np.asarray(batch[r.name]).reshape(-1, r.arity)
-            for r in self.query.relations
-        }
+        # validation FIRST: a poison batch must raise before any state
+        # mutation so the engine stays resumable (DESIGN.md §9)
+        offered = self._validate_batch(batch)
         now = self._clock()
 
         # 0. recovery boundary: heal partitions, fire scheduled host
@@ -985,17 +1111,36 @@ class StreamingJoinEngine:
 
         # 1. admission: backlog + batch against the live budget
         if self._controller is not None:
+            backlog_empty = all(
+                arr.shape[0] == 0 for arr in self._controller.backlog.values()
+            )
             admitted, decision = self._controller.admit(
                 offered, self.plan, self._concentration()
             )
             deferred, shed = decision.deferred, decision.shed
+            pristine = (
+                backlog_empty
+                and decision.total_deferred == 0
+                and decision.total_shed == 0
+            )
         else:
             admitted = offered
             deferred = {nm: 0 for nm in offered}
             shed = {nm: 0 for nm in offered}
+            pristine = True
         batch = {
             nm: np.ascontiguousarray(rows) for nm, rows in admitted.items()
         }
+        use_shared = (
+            shared_deltas is not None
+            and pristine
+            and all(
+                (a, rel.name) in shared_deltas
+                for rel in self.query.relations
+                for a in self.tracker.attrs
+                if a in rel.attrs
+            )
+        )
 
         # 2. retention: retire batches that left the window BEFORE this one
         #    joins, so new tuples only meet retained partners
@@ -1005,7 +1150,27 @@ class StreamingJoinEngine:
         # arrived; discarded (and redone) only if this batch triggers a
         # replan, so the common case is ONE fused pass per relation
         spec_routes: dict[str, _Routed] = {}
-        if self.config.fused_ingest:
+        if use_shared:
+            # absorb the MultiQueryEngine's shared CMS increments (computed
+            # once over this exact batch) instead of a private sketch pass
+            picked = {
+                (a, rel.name): shared_deltas[(a, rel.name)]
+                for rel in self.query.relations
+                for a in self.tracker.attrs
+                if a in rel.attrs
+            }
+            if self.config.fused_ingest:
+                has_plan = self.plan is not None
+                for rel in self.query.relations:
+                    routed, _ = self._fused_pass(
+                        rel, batch[rel.name], with_route=has_plan,
+                        with_sketch=False,
+                    )
+                    if routed is not None:
+                        spec_routes[rel.name] = routed
+                self.fused_batches += 1
+            self.tracker.observe_absorbed(batch, picked)
+        elif self.config.fused_ingest:
             deltas: dict[tuple[str, str], np.ndarray] = {}
             has_plan = self.plan is not None
             for rel in self.query.relations:
@@ -1019,8 +1184,10 @@ class StreamingJoinEngine:
                     spec_routes[rel.name] = routed
             self.tracker.observe_absorbed(batch, deltas)
             self.fused_batches += 1
+            self.sketch_ingest_calls += 1
         else:
             self.tracker.observe(batch)
+            self.sketch_ingest_calls += 1
         snapshot = self.tracker.snapshot(
             self._threshold(), self.config.max_hh_per_attr
         )

@@ -103,6 +103,9 @@ class RecoveryReport:
     reducers_before: int  # plan.total_reducers before / after recovery
     reducers_after: int
     verified: bool  # recovered state re-joined == window fingerprint
+    tenant: str = ""  # multi-tenant runs: which query this event repaired
+    #                   ("" in single-tenant engines; MultiQueryEngine
+    #                   relabels per-query events it aggregates)
 
 
 class HostTracker:

@@ -38,6 +38,24 @@ def _row_seeds(seed: int, depth: int) -> tuple[int, ...]:
     return tuple(int(s) for s in rng.integers(1, (1 << 31) - 1, size=depth))
 
 
+def cms_delta(col: np.ndarray, seeds: tuple[int, ...], width: int) -> np.ndarray:
+    """One column's [depth, width] Count-Min bucket-count increment.
+
+    Integer counts over the mix32 family — bit-identical to what
+    ``DecayingCountMin.update`` would add for the same column, so the
+    result can be ``absorb``-ed by any sketch sharing ``(seeds, width)``.
+    This is how a ``MultiQueryEngine`` computes ONE shared increment per
+    relation batch and hands it to every tenant's tracker (DESIGN.md §9).
+    """
+    delta = np.zeros((len(seeds), int(width)), dtype=np.float64)
+    col = np.asarray(col, dtype=np.int64)
+    if col.size:
+        for d, s in enumerate(seeds):
+            buckets = bucket_np(col, s, int(width))
+            delta[d] = np.bincount(buckets, minlength=int(width))
+    return delta
+
+
 class DecayingCountMin(CountMinSketch):
     """Count-Min over the mix32 row family with exponential decay.
 

@@ -49,6 +49,8 @@ import threading
 import time
 from typing import Callable, Iterable, Sequence
 
+import numpy as np
+
 KINDS = (
     "drop",
     "duplicate",
@@ -57,8 +59,42 @@ KINDS = (
     "host_loss",
     "partition",
     "corrupt_result",
+    "poison_rows",
+    "tenant_overload",
 )
-TARGETS = ("shard", "sketch", "host")
+TARGETS = ("shard", "sketch", "host", "tenant")
+
+POISON_MODES = ("domain", "nan", "arity", "missing")
+
+
+def _poison_rows(rows, mode: str):
+    """One relation's rows tampered into a schema violation the engine's
+    ``_validate_batch`` must reject (``missing`` is handled by the caller,
+    which drops the relation from the view entirely)."""
+    rows = np.asarray(rows)
+    if mode == "domain":
+        if rows.shape[0] == 0:
+            return np.full((1, max(1, rows.shape[-1] if rows.ndim == 2 else 1)),
+                           2**40, dtype=np.int64)
+        out = rows.astype(np.int64, copy=True).reshape(rows.shape)
+        out.flat[0] = 2**40  # outside the int32 routing domain
+        return out
+    if mode == "nan":
+        out = rows.astype(np.float64, copy=True)
+        if out.shape[0] == 0:
+            out = np.full((1, max(1, out.shape[-1] if out.ndim == 2 else 1)),
+                          np.nan)
+        else:
+            out.flat[0] = np.nan
+        return out
+    if mode == "arity":
+        wide = rows.reshape(rows.shape[0], -1) if rows.ndim == 2 else rows
+        if wide.ndim != 2 or wide.shape[0] == 0:
+            wide = np.zeros((1, 1), dtype=np.int64)
+        return np.concatenate(
+            [wide, np.zeros((wide.shape[0], 1), dtype=wide.dtype)], axis=1
+        )
+    return rows  # "missing": caller deletes the key
 
 
 class InjectedFault(RuntimeError):
@@ -80,19 +116,32 @@ class FaultSpec:
     ``target="host"``: fires at the *absolute* batch index ``batch``
     (``len(engine.reports)`` at the boundary), killing (``host_loss``) or
     partitioning (``partition``, healing after ``heal_after`` batches)
-    host ``host_id``.
+    host ``host_id``.  In multi-tenant runs ``tenant`` scopes the fault to
+    one query's recovery domain ("" = every tenant, the single-tenant
+    default).
+    ``target="tenant"``: tampers tenant ``tenant``'s *view* of the shared
+    batch at absolute index ``batch`` — ``poison_rows`` injects a
+    schema-violating batch (mode ``poison``: out-of-``domain`` value, NaN,
+    wrong ``arity``, ``missing`` relation) that the victim's validation
+    must reject and its circuit breaker must contain; ``tenant_overload``
+    inflates relation ``rel`` by ``rows`` duplicate rows so fair-share
+    shedding trims the offender, not its neighbors.
     """
 
     kind: str  # drop | duplicate | delay | preempt | host_loss | partition
-    #            | corrupt_result
+    #            | corrupt_result | poison_rows | tenant_overload
     target: str = "shard"
     shard_id: int = 0
     attempt: int = 1
     batch: int = 0  # sketch faults: which observe() call to tamper;
-    #                 host faults: absolute batch index at which to fire
+    #                 host/tenant faults: absolute batch index to fire at
     delay_s: float = 0.05  # delay faults: how long to stall
     host_id: int = 0  # host faults: which host dies / is partitioned
     heal_after: int = 2  # partition faults: batches until the host rejoins
+    tenant: str = ""  # host/tenant faults: which query is targeted
+    rel: str = ""  # tenant faults: which relation to tamper ("" = first)
+    poison: str = "domain"  # poison_rows mode (POISON_MODES)
+    rows: int = 1024  # tenant_overload: duplicate rows injected
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -109,6 +158,20 @@ class FaultSpec:
             raise ValueError("corrupt_result faults require target='shard'")
         if self.kind == "partition" and self.heal_after < 1:
             raise ValueError("partition heal_after must be >= 1 batch")
+        if self.kind in ("poison_rows", "tenant_overload"):
+            if self.target != "tenant":
+                raise ValueError(f"{self.kind} faults require target='tenant'")
+            if not self.tenant:
+                raise ValueError(f"{self.kind} faults need a tenant name")
+        if self.target == "tenant":
+            if self.kind not in ("poison_rows", "tenant_overload"):
+                raise ValueError(
+                    "tenant faults support poison_rows/tenant_overload only"
+                )
+            if self.poison not in POISON_MODES:
+                raise ValueError(f"unknown poison mode {self.poison!r}")
+            if self.kind == "tenant_overload" and self.rows < 1:
+                raise ValueError("tenant_overload rows must be >= 1")
 
 
 @dataclasses.dataclass
@@ -117,9 +180,12 @@ class FaultEvent:
 
     spec: FaultSpec
     action: str  # raised | delayed | duplicated | dropped_increment |
-    #              duplicated_increment
+    #              duplicated_increment | host_lost | partitioned |
+    #              poisoned | overloaded
     resolved: bool = False  # retry succeeded, or failure explicitly reported
     outcome: str = ""  # "result" | "error" once resolved ("" before/never)
+    tenant: str = ""  # which recovery domain the event fired in (host
+    #                   faults: an unscoped spec fires once per tenant)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +200,8 @@ class FaultReport:
     recovered: int = 0  # host faults the engine recovered from (lineage
     #                     replay or degraded repair; exhaustion counts as
     #                     ``reported``)
+    contained: int = 0  # tenant faults whose blast radius stayed inside the
+    #                     victim query (quarantine / counted shedding)
 
 
 class FaultInjector:
@@ -150,8 +218,10 @@ class FaultInjector:
         self.events: list[FaultEvent] = []
         self._lock = threading.Lock()
 
-    def _record(self, spec: FaultSpec, action: str) -> FaultEvent:
-        ev = FaultEvent(spec=spec, action=action)
+    def _record(
+        self, spec: FaultSpec, action: str, tenant: str = ""
+    ) -> FaultEvent:
+        ev = FaultEvent(spec=spec, action=action, tenant=tenant)
         with self._lock:
             self.events.append(ev)
         return ev
@@ -235,21 +305,33 @@ class FaultInjector:
         ]
 
     # ---- host seam ---------------------------------------------------------
-    def fire_host_faults(self, batch: int) -> list[FaultEvent]:
+    def fire_host_faults(self, batch: int, tenant: str = "") -> list[FaultEvent]:
         """Record and return the host faults scheduled for the *absolute*
         batch index ``batch`` — each fires exactly once even across a
         checkpoint/restore boundary, because a restored engine resumes at
         ``len(reports)`` past every already-fired index.  The engine marks
         the returned events resolved once recovery completes (or fails
-        explicitly)."""
+        explicitly).
+
+        ``tenant`` is the recovery domain doing the asking: a spec scoped
+        to one tenant fires only in that tenant's engine, while an
+        unscoped spec (``tenant=""``) fires everywhere — so a targeted
+        host loss repairs one query and leaves its neighbors' reducer
+        state untouched (the isolation contract of DESIGN.md §9)."""
         events = []
         with self._lock:
-            fired = {id(ev.spec) for ev in self.events if ev.spec.target == "host"}
+            fired = {
+                (id(ev.spec), ev.tenant)
+                for ev in self.events
+                if ev.spec.target == "host"
+            }
         for s in self.faults:
-            if s.target != "host" or s.batch != batch or id(s) in fired:
+            if s.target != "host" or s.batch != batch:
+                continue
+            if s.tenant not in ("", tenant) or (id(s), tenant) in fired:
                 continue
             action = "host_lost" if s.kind == "host_loss" else "partitioned"
-            events.append(self._record(s, action))
+            events.append(self._record(s, action, tenant=tenant))
         return events
 
     @staticmethod
@@ -259,6 +341,59 @@ class FaultInjector:
         exhausted and the engine raised — explicit either way."""
         ev.resolved = True
         ev.outcome = "result" if recovered else "error"
+
+    # ---- tenant seam (DESIGN.md §9) ----------------------------------------
+    def apply_tenant_faults(
+        self, batch: int, tenant: str, view: dict
+    ) -> tuple[dict, list[FaultEvent]]:
+        """Return tenant ``tenant``'s (possibly tampered) view of the
+        shared batch at absolute index ``batch``, plus the events fired.
+
+        The tampering happens *per tenant view* — the shared batch object
+        is never mutated, so neighbors read pristine rows (the whole point
+        of tenant-targeted injection: only the victim's ingest sees the
+        poison).  The ``MultiQueryEngine`` resolves the returned events via
+        ``mark_tenant_event`` once it has contained the damage (quarantine
+        for poison, counted shedding for overload); an unresolved tenant
+        event fails ``assert_all_resolved``.
+        """
+        specs = [
+            s
+            for s in self.faults
+            if s.target == "tenant" and s.batch == batch and s.tenant == tenant
+        ]
+        if not specs:
+            return view, []
+        out = {nm: np.asarray(rows) for nm, rows in view.items()}
+        events = []
+        for s in specs:
+            nm = s.rel or sorted(out)[0]
+            if nm not in out:
+                raise ValueError(
+                    f"tenant fault targets relation {nm!r}, not in batch"
+                )
+            if s.kind == "poison_rows":
+                events.append(self._record(s, "poisoned", tenant=tenant))
+                out[nm] = _poison_rows(out[nm], s.poison)
+                if s.poison == "missing":
+                    del out[nm]
+            else:
+                events.append(self._record(s, "overloaded", tenant=tenant))
+                rows = out[nm]
+                if rows.shape[0]:
+                    reps = -(-s.rows // rows.shape[0])  # ceil
+                    extra = np.tile(rows, (reps, 1))[: s.rows]
+                    out[nm] = np.concatenate([rows, extra], axis=0)
+        return out, events
+
+    @staticmethod
+    def mark_tenant_event(ev: FaultEvent, contained: bool) -> None:
+        """Resolve a tenant event: ``contained=True`` means the engine
+        quarantined the victim / shed the overload with exact counters and
+        every neighbor stayed bit-identical; ``False`` means containment
+        itself failed (the run should fail its test)."""
+        ev.resolved = True
+        ev.outcome = "result" if contained else "error"
 
     # ---- resolution --------------------------------------------------------
     def resolve(self, outcomes: Sequence) -> None:
@@ -288,9 +423,12 @@ class FaultInjector:
         with self._lock:
             events = list(self.events)
         retried_ok = reported = sketch = unresolved = recovered = 0
+        contained = 0
         for ev in events:
             if ev.spec.target == "sketch":
                 sketch += 1
+            elif ev.spec.target == "tenant" and ev.outcome == "result":
+                contained += 1
             elif ev.spec.target == "host" and ev.outcome == "result":
                 recovered += 1
             elif ev.outcome == "result":
@@ -306,6 +444,7 @@ class FaultInjector:
             sketch_tampered=sketch,
             unresolved=unresolved,
             recovered=recovered,
+            contained=contained,
         )
 
     def assert_all_resolved(self) -> None:
@@ -319,6 +458,9 @@ class FaultInjector:
                 + "; ".join(
                     f"{ev.spec.kind}@host{ev.spec.host_id}/batch{ev.spec.batch}"
                     if ev.spec.target == "host"
+                    else f"{ev.spec.kind}@tenant{ev.spec.tenant!r}"
+                    f"/batch{ev.spec.batch}"
+                    if ev.spec.target == "tenant"
                     else f"{ev.spec.kind}@shard{ev.spec.shard_id}"
                     f"/attempt{ev.spec.attempt}"
                     for ev in bad

@@ -33,6 +33,27 @@ def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
+def tenant_checkpoint_dir(directory: str, tenant: str) -> str:
+    """Per-tenant namespaced sub-directory under a shared checkpoint root.
+
+    A ``MultiQueryEngine`` (DESIGN.md §9) checkpoints every tenant's
+    engine independently — same atomic step/LATEST layout, one namespace
+    per query — so kill → resume restores each tenant bit-identically and
+    a corrupt save in one namespace can never touch a neighbor's.  Tenant
+    names are restricted to filename-safe tokens so a query id can't
+    escape the root (``../``) or collide with the ``step_``/``LATEST``
+    entries of a non-namespaced checkpoint.
+    """
+    if not tenant or not all(c.isalnum() or c in "-_." for c in tenant):
+        raise ValueError(
+            f"tenant name {tenant!r} is not filename-safe "
+            "(alphanumerics, '-', '_', '.' only)"
+        )
+    if tenant.startswith(("step_", ".")) or tenant == "LATEST":
+        raise ValueError(f"tenant name {tenant!r} is reserved")
+    return os.path.join(directory, f"tenant_{tenant}")
+
+
 def save_checkpoint(
     directory: str,
     step: int,

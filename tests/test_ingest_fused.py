@@ -361,3 +361,118 @@ def test_property_total_comm_invariant_under_fusion():
                 f"({rb.total_comm} != {rf.total_comm})"
             )
             assert rb.comm_tuples == rf.comm_tuples
+
+
+# ------------------------------------------- dense (dynamic-operand) routes
+@pytest.mark.parametrize("double_buffer", [False, True])
+def test_dense_kernel_matches_static_variant(double_buffer):
+    """The dense route encoding is bit-identical to the static-route
+    kernel on dest/rank/counts/cms, including pins and excludes."""
+    from repro.kernels.ingest_fused import (
+        dense_route_encoding,
+        fused_ingest_dense_pallas,
+        route_width,
+    )
+
+    rng = np.random.default_rng(17)
+    for query in (two_way(), three_way_paper()):
+        plan = _skewed_plan(query, rng)
+        seeds = (11, 222, 3333)
+        for rel in query.relations:
+            routes = static_route_table(plan, rel)
+            n = 311
+            rows = jnp.asarray(
+                rng.integers(0, 60, size=(n, rel.arity)).astype(np.int32)
+            )
+            d1, r1, c1, m1 = fused_ingest_pallas(
+                rows, routes=routes, sketch_cols=(rel.arity - 1,),
+                seeds=seeds, width=128,
+                num_reducers=plan.total_reducers,
+                block=128, double_buffer=double_buffer,
+            )
+            w = route_width(routes)
+            wp = 1 << max(0, int(w - 1).bit_length())
+            k_pad = max(-(-plan.total_reducers // 128) * 128, 128)
+            enc = dense_route_encoding(routes, rel.arity, wp, max_values=8)
+            d2, r2, c2, m2 = fused_ingest_dense_pallas(
+                rows, enc, sketch_cols=(rel.arity - 1,),
+                seeds=seeds, width=128, k_pad=k_pad,
+                block=128, double_buffer=double_buffer,
+            )
+            np.testing.assert_array_equal(d1, np.asarray(d2)[:n, :w])
+            np.testing.assert_array_equal(r1, np.asarray(r2)[:n, :w])
+            np.testing.assert_array_equal(
+                c1, np.asarray(c2)[: plan.total_reducers]
+            )
+            np.testing.assert_array_equal(m1, m2)
+
+
+def test_dense_kernel_reuses_executable_across_replans():
+    """The whole point of the dense encoding: two DIFFERENT route tables
+    whose padded shapes agree must hit ONE compiled executable (the
+    static-route kernel recompiles per plan — the replan ingest spike)."""
+    from repro.kernels.ingest_fused import (
+        dense_route_encoding,
+        route_width,
+    )
+    from repro.kernels.ops import fused_ingest_dense
+
+    rng = np.random.default_rng(23)
+    query = two_way()
+    rel = query.relations[0]
+    plans = []
+    for hot in (7, 31):
+        data = {
+            r.name: rng.integers(0, 50, size=(600, r.arity)).astype(np.int64)
+            for r in query.relations
+        }
+        for r in query.relations:
+            data[r.name][:300, -1] = hot
+        plans.append(plan_shares_skew(query, data, q=60))
+    tables = [static_route_table(p, rel) for p in plans]
+    assert tables[0] != tables[1], "need genuinely different route tables"
+    wp = max(
+        1 << max(0, int(route_width(t) - 1).bit_length()) for t in tables
+    )
+    rows = jnp.asarray(
+        rng.integers(0, 60, size=(200, rel.arity)).astype(np.int32)
+    )
+    before = fused_ingest_dense._cache_size()
+    for t in tables:
+        enc = dense_route_encoding(t, rel.arity, wp, max_values=8)
+        fused_ingest_dense(
+            rows, enc, sketch_cols=(1,), seeds=(11, 22), width=128,
+            k_pad=128, block=128, double_buffer=False,
+        )[0].block_until_ready()
+    assert fused_ingest_dense._cache_size() - before <= 1, (
+        "a second route table with identical padded shapes recompiled"
+    )
+
+
+def test_engine_dynamic_routes_bit_identical_to_static():
+    """StreamConfig(fused_dynamic_routes=True) — the default — must be
+    bit-identical to the static-route fused engine across drift/replans."""
+    rng = np.random.default_rng(29)
+    batches = [
+        _zipf_batch(rng, shift=0 if i < 3 else 900, a=2.0 if i < 3 else 1.4)
+        for i in range(6)
+    ]
+    cfg = dict(q=60, decay=0.5, load_factor=2.0, fused_ingest=True)
+    static = StreamingJoinEngine(
+        two_way(), StreamConfig(fused_dynamic_routes=False, **cfg)
+    )
+    dyn = StreamingJoinEngine(
+        two_way(), StreamConfig(fused_dynamic_routes=True, **cfg)
+    )
+    for i, batch in enumerate(batches):
+        rs = static.ingest(batch)
+        rd = dyn.ingest(batch)
+        assert rs == rd, f"batch {i} reports diverge"
+    assert any(r.replanned for r in dyn.reports[1:]), "stream must drift"
+    for nm in ("R", "S"):
+        for a, b in zip(static._state[nm], dyn._state[nm]):
+            np.testing.assert_array_equal(a, b)
+    for key in static.tracker._cms:
+        np.testing.assert_array_equal(
+            static.tracker._cms[key].table, dyn.tracker._cms[key].table
+        )

@@ -284,3 +284,132 @@ def test_drift_hysteresis_no_replan_thrash():
     )
     count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
     assert (eng.total_count, eng.total_checksum) == (count, checksum)
+
+
+# ------------------------------------------------- retention edge cases
+def test_window_of_one_batch():
+    """window_batches=1: only the current batch is retained; after every
+    ingest the window fingerprint equals the oracle on that batch alone."""
+    rng = np.random.default_rng(11)
+    eng = StreamingJoinEngine(
+        two_way(),
+        StreamConfig(
+            q=60, decay=0.5, load_factor=2.0,
+            retention=RetentionPolicy(window_batches=1),
+        ),
+    )
+    for i in range(6):
+        batch = _zipf_batch(rng, 0 if i < 3 else 300)
+        eng.ingest(batch)
+        count, checksum, _, _ = oracle_join(two_way(), batch)
+        assert (eng.window_count, eng.window_checksum) == (count, checksum)
+        assert sum(len(b) for b in eng._history["R"]) == len(batch["R"])
+    assert eng.expired_batches == 5
+
+
+def test_all_rows_expired_window_then_recovers():
+    """When every retained batch expires (only zero-row batches remain in
+    the window), the fingerprint collapses to (0, 0) and the engine keeps
+    serving: the next real batch rebuilds an exact window."""
+    rng = np.random.default_rng(12)
+    eng = StreamingJoinEngine(
+        two_way(),
+        StreamConfig(
+            q=60, decay=0.5, load_factor=2.0,
+            retention=RetentionPolicy(window_batches=2),
+        ),
+    )
+    eng.ingest(_zipf_batch(rng, 0))
+    eng.ingest(_zipf_batch(rng, 0))
+    assert eng.window_count > 0
+    empty = {"R": np.zeros((0, 2), np.int64), "S": np.zeros((0, 2), np.int64)}
+    eng.ingest(empty)
+    eng.ingest(empty)  # both real batches have now expired
+    assert (eng.window_count, eng.window_checksum) == (0, 0)
+    assert all(len(b) == 0 for b in eng._history["R"])
+    fresh = _zipf_batch(rng, 300)
+    eng.ingest(fresh)
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert count > 0
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+
+
+def test_zero_row_batch_mid_window_is_a_noop():
+    """A zero-row batch inside the window must not move the fingerprint,
+    expire anything early, or perturb the carried state."""
+    rng = np.random.default_rng(13)
+    eng = StreamingJoinEngine(
+        two_way(),
+        StreamConfig(
+            q=60, decay=0.5, load_factor=2.0,
+            retention=RetentionPolicy(window_batches=8),
+        ),
+    )
+    for _ in range(3):
+        eng.ingest(_zipf_batch(rng, 0))
+    before = (
+        eng.window_count, eng.window_checksum,
+        eng.total_count, eng.total_checksum, eng.expired_batches,
+    )
+    carried_before = sum(
+        int(occ.sum()) for _, _, occ in eng._state.values()
+    )
+    empty = {"R": np.zeros((0, 2), np.int64), "S": np.zeros((0, 2), np.int64)}
+    report = eng.ingest(empty)
+    assert report.delta_count == 0
+    assert report.retracted_count == 0
+    assert (
+        eng.window_count, eng.window_checksum,
+        eng.total_count, eng.total_checksum, eng.expired_batches,
+    ) == before
+    assert sum(int(occ.sum()) for _, _, occ in eng._state.values()) == (
+        carried_before
+    )
+    # the stream continues exactly from where it was
+    eng.ingest(_zipf_batch(rng, 0))
+    count, checksum, _, _ = oracle_join(two_way(), eng.history_data())
+    assert (eng.window_count, eng.window_checksum) == (count, checksum)
+
+
+# ------------------------------------------------- admission validation
+def test_admission_policy_rejects_degenerate_knobs():
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="headroom"):
+            AdmissionPolicy(headroom=bad)
+    with pytest.raises(ValueError, match="max_backlog_rows"):
+        AdmissionPolicy(headroom=1.0, max_backlog_rows=-1)
+    with pytest.raises(ValueError, match="min_admit"):
+        AdmissionPolicy(headroom=1.0, min_admit=0)
+
+
+def test_admission_controller_rejects_degenerate_capacity():
+    from repro.stream import AdmissionController
+
+    pol = AdmissionPolicy(headroom=1.0)
+    for bad_q in (0.0, -5.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="capacity"):
+            AdmissionController(pol, two_way(), bad_q)
+    ctl = AdmissionController(pol, two_way(), 60.0)
+    for bad in (0.0, -0.5, 1.5, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="factor"):
+            ctl.set_capacity(bad)
+    ctl.set_capacity(0.5)  # a legal degrade still works
+    assert ctl.capacity_factor == 0.5
+
+
+def test_weighted_fair_allocation_validation_and_invariants():
+    from repro.stream import weighted_fair_allocation
+
+    with pytest.raises(ValueError, match="capacity"):
+        weighted_fair_allocation({"a": 1.0}, {"a": 1.0}, float("nan"))
+    with pytest.raises(ValueError, match="weight"):
+        weighted_fair_allocation({"a": 1.0}, {"a": 0.0}, 10.0)
+    with pytest.raises(ValueError, match="demand"):
+        weighted_fair_allocation({"a": -1.0}, {"a": 1.0}, 10.0)
+    # work-conserving, demand-capped, under-share tenants untouched
+    alloc = weighted_fair_allocation(
+        {"a": 10.0, "b": 100.0}, {"a": 1.0, "b": 1.0}, 60.0
+    )
+    assert alloc["a"] == 10.0  # under fair share: never trimmed
+    assert alloc["b"] == 50.0  # soaks up the surplus
+    assert sum(alloc.values()) == 60.0

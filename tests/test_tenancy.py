@@ -1,0 +1,453 @@
+"""Multi-tenant isolation tests (DESIGN.md §9): shared sketch ingest,
+blast-radius containment, fair-share overload control, tenant-scoped
+recovery, and namespaced checkpoints.
+
+The acceptance proof (`test_isolation_proof`): three concurrent queries
+over one shared stream, each hit by a different tenant-targeted fault —
+poison rows into A, a forced ``RecoveryExhaustedError`` in B, an overload
+burst shed off C — plus a clean bystander D whose cumulative fingerprint
+must stay bit-identical to a single-tenant run, with the shared sketch
+pass computed exactly once per relation batch (counter-asserted).
+"""
+import numpy as np
+import pytest
+
+from repro.core import two_way
+from repro.mapreduce import oracle_join
+from repro.stream import (
+    DEGRADED,
+    FAILED,
+    QUARANTINED,
+    RUNNING,
+    MultiQueryEngine,
+    RecoveryPolicy,
+    StreamConfig,
+    StreamingJoinEngine,
+    TenancyPolicy,
+    TenantSpec,
+)
+from repro.stream.sketch import cms_delta
+from repro.testing.faults import FaultInjector, FaultSpec
+
+pytestmark = pytest.mark.tenancy
+
+N_BATCHES = 8
+
+
+def _zipf_batch(rng, shift, n_r=240, n_s=80, domain=600, a=1.6):
+    b_r = ((rng.zipf(a, n_r) - 1) + shift) % domain
+    b_s = ((rng.zipf(a, n_s) - 1) + shift) % domain
+    r = np.stack([rng.integers(0, domain, n_r), b_r], 1).astype(np.int64)
+    s = np.stack([b_s, rng.integers(0, domain, n_s)], 1).astype(np.int64)
+    return {"R": r, "S": s}
+
+
+def _batches(n=N_BATCHES, seed=0):
+    rng = np.random.default_rng(seed)
+    return [_zipf_batch(rng, 0 if i < n // 2 else 300) for i in range(n)]
+
+
+def _cfg(**kw):
+    return StreamConfig(q=60, decay=0.5, load_factor=2.0, **kw)
+
+
+def _solo_run(config=None, batches=None):
+    """Single-tenant reference: the bit-identity baseline."""
+    eng = StreamingJoinEngine(two_way(), config or _cfg())
+    for b in batches or _batches():
+        eng.ingest({k: v.copy() for k, v in b.items()})
+    return eng
+
+
+# ---------------------------------------------------- shared sketch ingest
+def test_shared_sketch_runs_once_and_absorbs_bit_identically():
+    """N tenants behind one ingest: the CMS pass runs once per relation
+    batch, every tenant absorbs it, and every tenant's reports are
+    bit-identical to a solo engine — sharing is pure plumbing."""
+    batches = _batches()
+    solo = _solo_run(batches=batches)
+    mq = MultiQueryEngine(
+        [TenantSpec(f"t{i}", two_way(), _cfg()) for i in range(3)]
+    )
+    for b in batches:
+        mq.ingest(b)
+    for i in range(3):
+        eng = mq.engine(f"t{i}")
+        assert eng.sketch_ingest_calls == 0  # never computed privately
+        for rs, rm in zip(solo.reports, eng.reports):
+            assert rs == rm
+    # one pass per (attr, rel) column per batch: B appears in R and S
+    assert mq.shared_sketch_passes == 2 * N_BATCHES
+    assert solo.sketch_ingest_calls == N_BATCHES
+
+
+def test_cms_delta_matches_private_update():
+    """The shared-pass primitive is bit-identical to a private CMS pass
+    (integer bincounts are exact in float64)."""
+    from repro.stream.sketch import DecayingCountMin
+
+    rng = np.random.default_rng(3)
+    col = rng.integers(0, 10_000, 5_000)
+    shared = DecayingCountMin(width=256, depth=3, seed=9)
+    private = DecayingCountMin(width=256, depth=3, seed=9)
+    private.update(col)
+    delta = cms_delta(col, private.seeds, private.width)
+    shared.absorb(delta, len(col))
+    assert np.array_equal(shared.table, private.table)
+
+
+def test_tampered_tenant_falls_back_to_private_pass():
+    """A tenant whose view was tampered (overload burst) must not absorb
+    the shared delta for that batch — correctness never rides on it."""
+    batches = _batches()
+    mq = MultiQueryEngine(
+        [TenantSpec("a", two_way(), _cfg()),
+         TenantSpec("b", two_way(), _cfg())]
+    )
+    inj = FaultInjector(
+        [FaultSpec(kind="tenant_overload", target="tenant", tenant="b",
+                   batch=3, rel="R", rows=500)]
+    )
+    mq.arm_faults(inj)
+    for b in batches:
+        mq.ingest(b)
+    inj.assert_all_resolved()
+    assert mq.engine("a").sketch_ingest_calls == 0
+    assert mq.engine("b").sketch_ingest_calls == 1  # the burst batch only
+
+
+# ---------------------------------------------------- the acceptance proof
+def test_isolation_proof():
+    """Three faulted queries + one clean bystander over one stream:
+
+      * poison rows -> A (quarantined, reopened, neighbors untouched)
+      * forced RecoveryExhaustedError -> B (FAILED, contained)
+      * overload burst -> C (shed off C alone)
+
+    The bystander D and every pre-fault prefix stay bit-identical to the
+    single-tenant run; the shared sketch ran once per relation batch."""
+    batches = _batches()
+    solo = _solo_run(batches=batches)
+    count, checksum = solo.total_count, solo.total_checksum
+
+    # B runs with the host model on, provisioned so that ANY host loss is
+    # beyond the survivable grid (min_hosts == n_hosts)
+    mq = MultiQueryEngine(
+        [
+            TenantSpec("A", two_way(), _cfg()),
+            TenantSpec("B", two_way(), _cfg(
+                recovery=RecoveryPolicy(n_hosts=4, min_hosts=4))),
+            TenantSpec("C", two_way(), _cfg()),
+            TenantSpec("D", two_way(), _cfg()),
+        ],
+        TenancyPolicy(breaker_backoff=1),
+    )
+    shed_batch = 5
+    inj = FaultInjector(
+        [
+            FaultSpec(kind="poison_rows", target="tenant", tenant="A",
+                      batch=2, poison="domain"),
+            FaultSpec(kind="tenant_overload", target="tenant", tenant="C",
+                      batch=shed_batch, rel="R", rows=4000),
+        ]
+    )
+    mq.arm_faults(inj)
+
+    from repro.stream import replication_width
+
+    for i, b in enumerate(batches):
+        if i == 4:
+            # the forced-exhaustion kill: B alone loses a host it cannot
+            # survive; everyone else never notices
+            assert mq.fail_hosts("B", [0]) is None
+            assert mq.status()["B"].state == FAILED
+        if i == shed_batch:
+            # cap capacity at 1.5x observed steady demand: normal load
+            # fits, C's injected 4000-row burst does not
+            mq.fair.capacity = 1.5 * sum(
+                len(b[rel.name])
+                * replication_width(mq.engine(nm).plan, rel.name)
+                for nm in mq.serving()
+                for rel in two_way().relations
+            )
+        reports = mq.ingest(b)
+        if i == shed_batch:
+            mq.fair.capacity = None
+        if i == 2:
+            assert reports["A"] is None  # poisoned batch never ingested
+            assert mq.status()["A"].state == QUARANTINED
+        if i >= 4:
+            assert reports["B"] is None
+
+    inj.assert_all_resolved()
+    rep = inj.report()
+    assert rep.contained == 2 and rep.unresolved == 0
+
+    status = mq.status()
+    assert status["A"].state == RUNNING  # reopened after backoff
+    assert status["A"].reopens == 1
+    assert status["B"].state == FAILED
+    assert "RecoveryExhaustedError" in status["B"].last_error
+    assert status["D"].state == RUNNING
+    assert mq.serving() == ["A", "C", "D"]
+
+    # the clean bystander is bit-identical to the single-tenant run and
+    # never computed its own sketch pass
+    d = mq.engine("D")
+    assert (d.total_count, d.total_checksum) == (count, checksum)
+    assert d.sketch_ingest_calls == 0
+    for rs, rm in zip(solo.reports, d.reports):
+        assert rs == rm
+
+    # A matches solo exactly up to the poison batch, then resumes after
+    # its quarantine window (missing exactly batches 2 and 3)
+    a = mq.engine("A")
+    assert [r.batch for r in a.reports] == [0, 1, 2, 3, 4, 5]
+    for rs, rm in zip(solo.reports[:2], a.reports[:2]):
+        assert rs == rm
+    assert a.total_count < count
+
+    # B matches solo exactly up to the kill boundary, then stopped
+    bq = mq.engine("B")
+    for rs, rm in zip(solo.reports[:4], bq.reports):
+        assert (rs.total_count, rs.total_checksum) == (
+            rm.total_count, rm.total_checksum,
+        )
+    assert len(bq.reports) == 4
+
+    # C: the burst was shed off C alone; neighbors were never trimmed
+    assert mq.fair.overload_shed["C"] > 0
+    assert mq.fair.overload_shed["D"] == mq.fair.overload_shed["A"] == 0
+    assert mq.engine("C").sketch_ingest_calls == 1  # the burst batch only
+
+    # the shared sketch pass ran once per relation batch regardless of the
+    # number of (eligible) absorbing tenants
+    assert mq.shared_sketch_passes == 2 * N_BATCHES
+
+
+def test_overload_sheds_only_the_offender():
+    """A tenant-targeted overload burst under an aggregate cap is shed off
+    the bursting tenant alone; neighbors stay bit-identical."""
+    batches = _batches()
+    solo = _solo_run(batches=batches)
+    mq = MultiQueryEngine(
+        [TenantSpec("hog", two_way(), _cfg()),
+         TenantSpec("calm", two_way(), _cfg())]
+    )
+    inj = FaultInjector(
+        [FaultSpec(kind="tenant_overload", target="tenant", tenant="hog",
+                   batch=4, rel="R", rows=4000)]
+    )
+    mq.arm_faults(inj)
+    from repro.stream import replication_width
+
+    for i, b in enumerate(batches):
+        if i == 4:
+            # cap at 1.5x the observed steady demand: both tenants' normal
+            # load fits, the injected 4000-row burst does not
+            mq.fair.capacity = 1.5 * sum(
+                len(b[rel.name])
+                * replication_width(mq.engine(nm).plan, rel.name)
+                for nm in mq.serving()
+                for rel in two_way().relations
+            )
+        mq.ingest(b)
+        if i == 4:
+            mq.fair.capacity = None
+    inj.assert_all_resolved()
+    assert inj.report().contained == 1
+    assert mq.fair.overload_shed["hog"] > 0
+    assert mq.fair.overload_shed["calm"] == 0
+    assert mq.fair.backpressure["hog"] == 1
+    calm = mq.engine("calm")
+    assert (calm.total_count, calm.total_checksum) == (
+        solo.total_count, solo.total_checksum,
+    )
+
+
+# ---------------------------------------------------------- circuit breaker
+def test_breaker_backoff_reopens_then_fails():
+    """Repeated poison: exponential quarantine growth, bounded reopens,
+    terminal FAILED — while the neighbor never misses a batch."""
+    batches = _batches(12, seed=7)
+    solo = _solo_run(batches=batches)
+    mq = MultiQueryEngine(
+        [TenantSpec("sick", two_way(), _cfg()),
+         TenantSpec("ok", two_way(), _cfg())],
+        TenancyPolicy(breaker_backoff=1, breaker_max_reopens=2),
+    )
+    # poison EVERY batch the sick tenant ever serves
+    inj = FaultInjector(
+        [FaultSpec(kind="poison_rows", target="tenant", tenant="sick",
+                   batch=b, poison="nan") for b in range(12)]
+    )
+    mq.arm_faults(inj)
+    states = []
+    for b in batches:
+        mq.ingest(b)
+        states.append(mq.status()["sick"].state)
+    # trip at 0 -> quarantined (backoff 1), reopen at 2 -> trip (backoff 2),
+    # reopen at 5 -> trip: reopen budget (2) spent -> FAILED
+    assert states[0] == QUARANTINED
+    assert states[2] == QUARANTINED  # reopened and re-tripped same batch
+    assert FAILED in states
+    assert states[-1] == FAILED
+    assert mq.status()["sick"].reopens == 2
+    assert mq.engine("sick").total_count == 0  # nothing ever got in
+    ok = mq.engine("ok")
+    assert (ok.total_count, ok.total_checksum) == (
+        solo.total_count, solo.total_checksum,
+    )
+    # poison specs for batches the victim never served are unresolved-free:
+    # they simply never fired
+    inj.assert_all_resolved()
+
+
+def test_poison_rejected_before_any_state_mutation():
+    """A poisoned batch must not touch the victim's state: totals, window
+    and sketch all match the engine that never saw the batch."""
+    batches = _batches()
+    ref = StreamingJoinEngine(two_way(), _cfg())
+    vic = StreamingJoinEngine(two_way(), _cfg())
+    for i, b in enumerate(batches[:4]):
+        ref.ingest(b)
+        vic.ingest(b)
+    bad = {"R": batches[4]["R"].astype(np.float64), "S": batches[4]["S"]}
+    bad["R"][0, 0] = np.nan
+    with pytest.raises(ValueError, match="poisoned batch"):
+        vic.ingest(bad)
+    assert (vic.total_count, vic.total_checksum) == (
+        ref.total_count, ref.total_checksum,
+    )
+    ref.ingest(batches[5])
+    vic.ingest(batches[5])  # engine still serves after the rejection
+    assert (vic.total_count, vic.total_checksum) == (
+        ref.total_count, ref.total_checksum,
+    )
+
+
+def test_poison_modes_all_rejected():
+    eng = StreamingJoinEngine(two_way(), _cfg())
+    good = _batches()[0]
+    eng.ingest(good)
+    n = eng.total_count
+    cases = [
+        {"R": good["R"], "S": good["S"][:, :1]},  # arity
+        {"R": good["R"]},  # missing relation
+        {"R": np.where(good["R"] == good["R"][0, 0], 2**40, good["R"]),
+         "S": good["S"]},  # out of int32 routing domain
+        {"R": good["R"].astype(object), "S": good["S"]},  # non-numeric
+    ]
+    for bad in cases:
+        with pytest.raises(ValueError, match="poisoned batch"):
+            eng.ingest(bad)
+    assert eng.total_count == n
+
+
+# ---------------------------------------------------- tenant-scoped recovery
+def test_host_loss_repairs_one_tenant_only():
+    """A survivable host kill in one tenant's domain: the victim recovers
+    (possibly DEGRADED), the neighbor's fingerprints never move."""
+    from repro.stream import RetentionPolicy
+
+    batches = _batches()
+    solo = _solo_run(batches=batches)
+    rec_cfg = _cfg(
+        retention=RetentionPolicy(window_batches=4),
+        recovery=RecoveryPolicy(n_hosts=8),
+    )
+    mq = MultiQueryEngine(
+        [TenantSpec("vic", two_way(), rec_cfg),
+         TenantSpec("oth", two_way(), _cfg())]
+    )
+    for i, b in enumerate(batches):
+        if i == 5:
+            rep = mq.fail_hosts("vic", [2])
+            assert rep is not None and rep.verified
+            assert rep.tenant == "vic"
+        mq.ingest(b)
+    assert mq.status()["vic"].state in (RUNNING, DEGRADED)
+    oth = mq.engine("oth")
+    assert (oth.total_count, oth.total_checksum) == (
+        solo.total_count, solo.total_checksum,
+    )
+    # the victim's window stays exact post-recovery
+    vic = mq.engine("vic")
+    w_count, w_checksum, _, _ = oracle_join(two_way(), vic.history_data())
+    assert (vic.window_count, vic.window_checksum) == (w_count, w_checksum)
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_restore_bit_identical_for_all_tenants(tmp_path):
+    """Kill -> restore mid-stream: every tenant (including a quarantined
+    one) resumes bit-identically to the uninterrupted run."""
+    batches = _batches()
+    specs = [
+        TenantSpec("t0", two_way(), _cfg(), weight=2.0),
+        TenantSpec("t1", two_way(), _cfg()),
+    ]
+    pol = TenancyPolicy(breaker_backoff=2)
+
+    def faults():
+        return FaultInjector(
+            [FaultSpec(kind="poison_rows", target="tenant", tenant="t1",
+                       batch=3, poison="domain")]
+        )
+
+    full = MultiQueryEngine(specs, pol)
+    full.arm_faults(faults())
+    for b in batches:
+        full.ingest(b)
+
+    half = MultiQueryEngine(specs, pol)
+    half.arm_faults(faults())
+    for b in batches[:4]:
+        half.ingest(b)
+    half.save_checkpoint(str(tmp_path))
+    del half
+
+    resumed = MultiQueryEngine.restore(str(tmp_path), specs, pol)
+    assert resumed.batches == 4
+    assert resumed.status()["t1"].state == QUARANTINED
+    for b in batches[4:]:
+        resumed.ingest(b)
+
+    for nm in ("t0", "t1"):
+        a, b_ = full.engine(nm), resumed.engine(nm)
+        assert (a.total_count, a.total_checksum) == (
+            b_.total_count, b_.total_checksum,
+        )
+        assert [r.batch for r in a.reports] == [r.batch for r in b_.reports]
+    sa, sb = full.status(), resumed.status()
+    for nm in ("t0", "t1"):
+        assert (sa[nm].state, sa[nm].failures, sa[nm].reopens) == (
+            sb[nm].state, sb[nm].failures, sb[nm].reopens,
+        )
+    assert full.fair.overload_shed == resumed.fair.overload_shed
+
+
+def test_checkpoint_rejects_tenant_set_mismatch(tmp_path):
+    specs = [TenantSpec("a", two_way(), _cfg())]
+    mq = MultiQueryEngine(specs)
+    mq.ingest(_batches()[0])
+    mq.save_checkpoint(str(tmp_path))
+    other = [TenantSpec("zz", two_way(), _cfg())]
+    with pytest.raises(ValueError, match="tenant"):
+        MultiQueryEngine.restore(str(tmp_path), other)
+
+
+# ----------------------------------------------------------------- validation
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError, match="filename-safe"):
+        TenantSpec("a/b", two_way(), _cfg())
+    with pytest.raises(ValueError, match="reserved"):
+        TenantSpec("__control__", two_way(), _cfg())
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec("a", two_way(), _cfg(), weight=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiQueryEngine(
+            [TenantSpec("a", two_way(), _cfg()),
+             TenantSpec("a", two_way(), _cfg())]
+        )
+    with pytest.raises(ValueError, match="breaker_backoff"):
+        TenancyPolicy(breaker_backoff=0)
