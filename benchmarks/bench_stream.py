@@ -40,7 +40,12 @@ Tracked:
     once per relation batch), and a weighted fair-share run with an
     injected overload burst must shed ONLY the offending tenant; the
     ``tenancy`` sub-record tracks isolation overhead vs N separate
-    engines, sketch-sharing savings, and the per-tenant shed counters.
+    engines, sketch-sharing savings, and the per-tenant shed counters;
+  * observability (DESIGN.md §10): a fifth engine repeats the fused run
+    with tracing + metrics + skewscope all on — it must stay bit-identical
+    to the plain fused run and its median ingest overhead must stay under
+    2% (``obs.overhead_pct`` in the sub-record, alongside the span
+    taxonomy, the per-reducer skew snapshot, and the replan triggers).
 
 ``BENCH_stream.json`` (all fields documented in BENCHMARKS.md) records the
 trajectory run over run.  The fused engine counts its kernel passes; this
@@ -64,6 +69,7 @@ from repro.stream import (
     MultiQueryEngine,
     RecoveryPolicy,
     RetentionPolicy,
+    ObsPolicy,
     StreamConfig,
     StreamingJoinEngine,
     TenancyPolicy,
@@ -172,6 +178,43 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
             f"replan batch {i} took {fused_us[i] / 1e3:.0f} ms — the fused "
             "kernel recompiled at a replan boundary"
         )
+
+    # ---- observability overhead (DESIGN.md §10) ----------------------------
+    # the same fused run with every obs surface on (tracing + metrics +
+    # skewscope).  The kernels are warm by now (identical shapes), so the
+    # median delta over the plain fused run is the obs tax itself — gated
+    # at < 2% so the layer stays always-on-able
+    obs_eng, obs_us = run(
+        StreamConfig(
+            q=120, decay=0.5, load_factor=2.0, fused_ingest=True,
+            obs=ObsPolicy(trace=True, metrics=True, skewscope=True),
+        )
+    )
+    assert (obs_eng.total_count, obs_eng.total_checksum) == (count, checksum), (
+        "obs-enabled engine diverged from the oracle — instrumentation "
+        "touched the data path"
+    )
+    for i, (rf, ro) in enumerate(zip(fused.reports, obs_eng.reports)):
+        assert rf == ro, f"obs-enabled batch {i} report diverges from fused"
+    obs_med = _median(obs_us)
+    obs_overhead_pct = (obs_med - fused_med) / fused_med * 100.0
+    assert obs_overhead_pct < 2.0, (
+        f"tracing+metrics added {obs_overhead_pct:.2f}% to the fused median "
+        "ingest — the observability layer is no longer cheap"
+    )
+    chrome = obs_eng.obs.tracer.to_chrome()
+    skew_snapshot = obs_eng.skew_report()
+    obs_metrics = obs_eng.obs.metrics.snapshot()
+    replan_triggers = [
+        {
+            "batch": r.batch,
+            "trigger": r.drift_trigger,
+            "observed": r.drift_observed,
+            "threshold": r.drift_threshold,
+        }
+        for r in obs_eng.reports
+        if r.replanned
+    ]
 
     # ---- bounded state (DESIGN.md §8) --------------------------------------
     # same batches under windowed retention + admission: carried state must
@@ -357,6 +400,9 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
          f"lost_reducers={rec.lost_reducers};verified={rec.verified}")
     emit("stream_replan_compile", replan_compile_us,
          f"steady_median={steady_med:.0f}us;replans={len(replan_ix)}")
+    emit("stream_obs_overhead", obs_overhead_pct * 1000,
+         f"obs_median={obs_med:.0f}us;fused_median={fused_med:.0f}us;"
+         f"spans={len(chrome['traceEvents'])};x1000")
     emit("stream_tenancy_overhead", isolation_overhead * 1000,
          f"tenants={n_tenants};shared_passes={mq.shared_sketch_passes};"
          f"private_avoided={solo_private_passes};x1000")
@@ -449,6 +495,21 @@ def main(out_json: str | None = "BENCH_stream.json") -> None:
                 "overload_shed_rows": shed,
                 "fair_weights": {"f0": 2.0, "f1": 1.0, "f2": 1.0},
                 "contained_faults": contained,
+            },
+            "obs": {
+                # overhead of trace+metrics+skewscope over the plain fused
+                # run (same warm kernels) — gated < 2% above
+                "overhead_pct": obs_overhead_pct,
+                "obs_median_ingest_us": obs_med,
+                "fused_median_ingest_us": fused_med,
+                "trace_events": len(chrome["traceEvents"]),
+                "span_names": sorted(obs_eng.obs.tracer.span_names()),
+                "metric_series": {
+                    kind: len(series)
+                    for kind, series in obs_metrics.items()
+                },
+                "skew": skew_snapshot.as_dict(),
+                "replan_triggers": replan_triggers,
             },
             "total_count": base.total_count,
             "replan_reasons": [

@@ -1,12 +1,19 @@
-"""Render the §Roofline tables from dry-run artifacts.
+"""Render markdown tables from dry-run artifacts.
 
-  python -m benchmarks.report                      # print single-pod table
-  python -m benchmarks.report --mesh pod2x16x16    # multi-pod table
+  python -m benchmarks.report                      # print single-pod roofline
+  python -m benchmarks.report --mesh pod2x16x16    # multi-pod roofline
   python -m benchmarks.report --write-experiments  # splice into EXPERIMENTS.md
+  python -m benchmarks.report --stream             # BENCH_stream.json tables
+
+``--stream`` renders the streaming bench record (BENCHMARKS.md schema):
+the headline trajectory plus every sub-record — ``bounded`` (§8),
+``recovery`` (§5), ``tenancy`` (§9), and ``obs`` (§10, the observability
+overhead table with the span taxonomy and per-reducer skew snapshot).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import re
 
@@ -15,11 +22,122 @@ from .roofline import build_table, render_markdown
 _MARK = "<!-- ROOFLINE_TABLE -->"
 
 
+def _table(title: str, rows: list[tuple[str, object]]) -> str:
+    """One two-column markdown table with a bolded section header."""
+    out = [f"**{title}**", "", "| metric | value |", "|---|---|"]
+    out += [f"| {k} | {v} |" for k, v in rows]
+    return "\n".join(out)
+
+
+def _fmt(v: object) -> str:
+    if isinstance(v, float):
+        return f"{v:,.2f}"
+    if isinstance(v, int):
+        return f"{v:,}"
+    return str(v)
+
+
+def render_stream(record: dict) -> str:
+    """Markdown for one BENCH_stream.json record: headline + sub-records."""
+    sections = [
+        _table("Streaming ingest (DESIGN.md §6-§7)", [
+            ("batches", _fmt(record["batches"])),
+            ("comm ratio vs oracle", _fmt(record["comm_ratio_vs_oracle"])),
+            ("replans", _fmt(record["replans"])),
+            ("migrated tuples", _fmt(record["migrated_tuples"])),
+            ("baseline median ingest (us)", _fmt(record["median_ingest_us"])),
+            ("fused median ingest (us)",
+             _fmt(record["fused_median_ingest_us"])),
+            ("fused speedup", _fmt(record["fused_speedup"])),
+            ("replan-boundary overhead (us)",
+             _fmt(record["replan_compile_us"])),
+        ]),
+    ]
+    if "bounded" in record:
+        b = record["bounded"]
+        sections.append(_table("Bounded state (§8)", [
+            ("window (batches)", _fmt(b["window_batches"])),
+            ("peak carried tuples", _fmt(b["peak_carried_tuples"])),
+            ("peak carried (unbounded)",
+             _fmt(b["peak_carried_tuples_unbounded"])),
+            ("expired batches", _fmt(b["expired_batches"])),
+            ("retracted results", _fmt(b["retracted_results"])),
+            ("deferred rows", _fmt(b["deferred_rows"])),
+            ("shed rows", _fmt(b["shed_rows"])),
+            ("window fingerprint verified",
+             b["window_fingerprint_verified"]),
+        ]))
+    if "recovery" in record:
+        r = record["recovery"]
+        sections.append(_table("Reducer-loss recovery (§5)", [
+            ("hosts", _fmt(r["n_hosts"])),
+            ("kill batch / mode", f"{r['kill_batch']} / {r['mode']}"),
+            ("lost reducers", _fmt(r["lost_reducers"])),
+            ("replayed tuples", _fmt(r["replayed_tuples"])),
+            ("lost-share tuples", _fmt(r["lost_share_tuples"])),
+            ("recovery boundary (us)", _fmt(r["recovery_boundary_us"])),
+            ("survivors", _fmt(r["survivors"])),
+            ("fingerprint verified", r["fingerprint_verified"]),
+        ]))
+    if "tenancy" in record:
+        t = record["tenancy"]
+        shed = ", ".join(
+            f"{k}={_fmt(v)}" for k, v in sorted(t["overload_shed_rows"].items())
+        )
+        sections.append(_table("Multi-tenant (§9)", [
+            ("tenants", _fmt(t["tenants"])),
+            ("isolation overhead (x)", _fmt(t["isolation_overhead"])),
+            ("shared sketch passes", _fmt(t["shared_sketch_passes"])),
+            ("private passes avoided",
+             _fmt(t["private_sketch_passes_avoided"])),
+            ("tenants bit-identical", t["tenants_bit_identical"]),
+            ("overload shed rows", shed),
+            ("contained faults", _fmt(t["contained_faults"])),
+        ]))
+    if "obs" in record:
+        o = record["obs"]
+        series = ", ".join(
+            f"{k}={_fmt(v)}" for k, v in sorted(o["metric_series"].items())
+        )
+        skew = o["skew"]
+        triggers = "; ".join(
+            f"batch {x['batch']}: {x['trigger']} "
+            f"({x['observed']:.1f} > {x['threshold']:.1f})"
+            for x in o["replan_triggers"]
+        ) or "none"
+        sections.append(_table("Observability overhead (§10)", [
+            ("overhead vs plain fused (%)", _fmt(o["overhead_pct"])),
+            ("obs median ingest (us)", _fmt(o["obs_median_ingest_us"])),
+            ("fused median ingest (us)",
+             _fmt(o["fused_median_ingest_us"])),
+            ("trace events", _fmt(o["trace_events"])),
+            ("span taxonomy", ", ".join(o["span_names"])),
+            ("metric series", series),
+            ("reducer imbalance (max/mean)", _fmt(skew["imbalance"])),
+            ("HH routing hit rate", _fmt(skew["hh_hit_rate"])),
+            ("replan triggers", triggers),
+        ]))
+    return "\n\n".join(sections) + "\n"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--write-experiments", action="store_true")
+    ap.add_argument(
+        "--stream",
+        nargs="?",
+        const="BENCH_stream.json",
+        default=None,
+        metavar="PATH",
+        help="render the streaming bench record (default BENCH_stream.json)",
+    )
     args = ap.parse_args()
+
+    if args.stream is not None:
+        with open(args.stream) as fh:
+            print(render_stream(json.load(fh)), end="")
+        return
 
     md = render_markdown(build_table(args.mesh))
     if not args.write_experiments:

@@ -26,11 +26,20 @@ poison-pill batch is injected into tenant q1 mid-run — the circuit
 breaker quarantines it while every other tenant stays bit-identical to a
 single-tenant run (verified against the oracle at the end).
 
+``--trace out.json`` (DESIGN.md §10) records the whole run as nested
+spans — ingest, sketch update, route, delta join, drift checks, replan
+(solve/migrate split out), recovery replay — and writes Chrome
+trace-event JSON loadable in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing``.  Combine with ``--kill-reducer`` to see the drift
+replan AND the recovery boundary on one timeline.
+
 Run:  PYTHONPATH=src python examples/streaming_join.py
       PYTHONPATH=src python examples/streaming_join.py --ckpt-dir /tmp/sj
       (kill -TERM the process mid-run, then rerun the same command)
       PYTHONPATH=src python examples/streaming_join.py --kill-reducer 2
       PYTHONPATH=src python examples/streaming_join.py --queries 3
+      PYTHONPATH=src python examples/streaming_join.py \
+          --kill-reducer 2 --trace trace.json
 """
 import argparse
 import sys
@@ -41,6 +50,7 @@ from repro.core import two_way
 from repro.mapreduce import oracle_join
 from repro.stream import (
     MultiQueryEngine,
+    ObsPolicy,
     RecoveryPolicy,
     RetentionPolicy,
     StreamConfig,
@@ -64,7 +74,7 @@ def zipf_batch(rng, shift, n_r=1200, n_s=300, domain=3000, a=1.6):
     return {"R": r, "S": s}
 
 
-def multi_query_demo(n_queries: int) -> int:
+def multi_query_demo(n_queries: int, trace: str | None = None) -> int:
     """N tenants, one shared sketch ingest, poison-pill containment."""
     query = two_way()
     config = StreamConfig(q=120, decay=0.5, load_factor=2.0)
@@ -72,7 +82,10 @@ def multi_query_demo(n_queries: int) -> int:
         TenantSpec(f"q{i}", query, config, weight=1.0 + (i == 0))
         for i in range(n_queries)
     ]
-    mq = MultiQueryEngine(tenants, TenancyPolicy(), log_fn=print)
+    policy = TenancyPolicy(
+        obs=ObsPolicy(trace=True, metrics=True) if trace else ObsPolicy()
+    )
+    mq = MultiQueryEngine(tenants, policy, log_fn=print)
     inj = FaultInjector(
         [FaultSpec(kind="poison_rows", target="tenant", tenant="q1",
                    batch=4, poison="nan")]
@@ -117,6 +130,10 @@ def multi_query_demo(n_queries: int) -> int:
     print(f"verified: every unaffected tenant bit-identical to the oracle "
           f"({count} results, checksum {checksum:#010x}); q1 skipped its "
           f"quarantine window ({q1.total_count} results)")
+    if trace:
+        mq.obs.tracer.dump(trace)
+        print(f"wrote {len(mq.obs.tracer.to_chrome()['traceEvents'])} trace "
+              f"events to {trace} (load in https://ui.perfetto.dev)")
     return 0
 
 
@@ -136,6 +153,13 @@ def main(argv=None) -> int:
         "recover in-flight by lineage replay (DESIGN.md §5)",
     )
     parser.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT_JSON",
+        help="enable the observability layer and write the run as "
+        "Chrome/Perfetto trace-event JSON (DESIGN.md \u00a710)",
+    )
+    parser.add_argument(
         "--queries",
         type=int,
         default=None,
@@ -148,9 +172,14 @@ def main(argv=None) -> int:
     if args.queries is not None:
         if args.queries < 2:
             parser.error("--queries needs N >= 2")
-        return multi_query_demo(args.queries)
+        return multi_query_demo(args.queries, trace=args.trace)
 
     query = two_way()
+    obs = (
+        ObsPolicy(trace=True, metrics=True, skewscope=True)
+        if args.trace
+        else ObsPolicy()
+    )
     if args.kill_reducer is not None:
         # the recovery demo needs the host model + a retained window to
         # replay lost reducer state from
@@ -158,9 +187,10 @@ def main(argv=None) -> int:
             q=120, decay=0.5, load_factor=2.0,
             retention=RetentionPolicy(window_batches=4),
             recovery=RecoveryPolicy(n_hosts=8),
+            obs=obs,
         )
     else:
-        config = StreamConfig(q=120, decay=0.5, load_factor=2.0)
+        config = StreamConfig(q=120, decay=0.5, load_factor=2.0, obs=obs)
 
     start_batch = 0
     if args.ckpt_dir is not None and latest_step(args.ckpt_dir) is not None:
@@ -231,6 +261,13 @@ def main(argv=None) -> int:
         assert (engine.total_count, engine.total_checksum) == (count, checksum)
         print(f"verified: cumulative count/checksum == batch oracle "
               f"({count} results, checksum {checksum:#010x})")
+    if args.trace:
+        engine.obs.tracer.dump(args.trace)
+        skew = engine.skew_report()
+        print(f"wrote {len(engine.obs.tracer.to_chrome()['traceEvents'])} "
+              f"trace events to {args.trace} "
+              f"(load in https://ui.perfetto.dev); reducer imbalance "
+              f"{skew.imbalance:.2f}x, HH hit rate {skew.hh_hit_rate:.2f}")
     return 0
 
 

@@ -132,6 +132,7 @@ def run_with_speculation(
     injector=None,
     deadline_s: float | None = None,
     checksum_results: bool = False,
+    metrics=None,
 ) -> list[ShardOutcome]:
     """Run every shard; re-issue stragglers and failed attempts; return
     exactly one outcome per shard.  ``injector`` (``repro.testing.faults``)
@@ -140,8 +141,26 @@ def run_with_speculation(
     ``error``.  ``deadline_s`` declares an in-flight attempt failed after
     that many seconds (the zombie is fenced, not killed — threads cannot
     be).  ``checksum_results`` seals results in a worker-side CRC envelope
-    verified on receipt; a mismatch counts as a failed attempt."""
+    verified on receipt; a mismatch counts as a failed attempt.
+
+    ``metrics`` (DESIGN.md §10): anything with ``histogram(name,
+    **labels)`` / ``counter(name, **labels)`` — an ``obs.MetricsRegistry``
+    or the engine's ``Observability`` facade.  Per-attempt latencies land
+    in ``straggler_attempt_seconds`` (label ``outcome=ok|error``) and the
+    mitigation events in ``straggler_*_total`` counters.  The instruments
+    lock internally, so recording is safe from this runner's collector
+    even while worker threads are live."""
     outcomes: dict[int, ShardOutcome] = {}
+
+    def _count(name: str, **labels) -> None:
+        if metrics is not None:
+            metrics.counter(name, **labels).inc()
+
+    def _observe(seconds: float, **labels) -> None:
+        if metrics is not None:
+            metrics.histogram("straggler_attempt_seconds", **labels).observe(
+                seconds
+            )
 
     def wrapped(i: int, attempt: int) -> Callable[[], object]:
         fn = shard_fns[i]
@@ -197,11 +216,13 @@ def run_with_speculation(
             if i in outcomes:
                 return
             if submitted[i] < max_attempts:
+                _count("straggler_retries_total")
                 submit(i)
                 return
             pending_error.setdefault(i, msg)
             if inflight[i] == 0:
                 record_terminal(i, now)
+                _count("straggler_shards_failed_total")
 
         while futures:
             done, _ = wait(
@@ -219,6 +240,7 @@ def run_with_speculation(
                     continue  # backup finished after primary; ignore
                 exc = f.exception()
                 if exc is not None:
+                    _observe(now - started, outcome="error")
                     attempt_failed(i, f"{type(exc).__name__}: {exc}", now)
                     continue
                 result = f.result()
@@ -226,9 +248,12 @@ def run_with_speculation(
                     try:
                         result = result.unseal()
                     except ChecksumMismatch as cm:
+                        _observe(now - started, outcome="error")
+                        _count("straggler_checksum_mismatches_total")
                         attempt_failed(i, f"ChecksumMismatch: {cm}", now)
                         continue
                 elapsed = now - started  # this attempt's own latency
+                _observe(elapsed, outcome="ok")
                 outcomes[i] = ShardOutcome(
                     shard_id=i,
                     result=result,
@@ -245,6 +270,7 @@ def run_with_speculation(
                     if now - attempt_start[f] > deadline_s:
                         declared_dead.add(f)
                         inflight[i] -= 1
+                        _count("straggler_deadline_fences_total")
                         attempt_failed(
                             i,
                             f"deadline: attempt silent for > {deadline_s:g}s",
@@ -260,6 +286,7 @@ def run_with_speculation(
                         if submitted[i] >= max_attempts:
                             continue  # attempt budget exhausted
                         speculated.add(i)
+                        _count("straggler_speculated_total")
                         submit(i)
             # drop futures whose shard already completed via another attempt
             for f, i in list(futures.items()):
@@ -275,5 +302,6 @@ def run_with_speculation(
     for i in range(n):
         if i not in outcomes:
             record_terminal(i, now)
+            _count("straggler_shards_failed_total")
     assert len(outcomes) == n, "straggler runner lost a shard outcome"
     return [outcomes[i] for i in sorted(outcomes)]

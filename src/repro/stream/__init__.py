@@ -18,7 +18,14 @@ replanning (DESIGN.md §6; fused ingest hot path: §7; bounded state: §8).
   * ``tenancy``   — multi-tenant engine: N queries behind one ingest with
     shared sketch passes, per-query circuit breakers, weighted fair-share
     overload shedding, tenant-scoped recovery (DESIGN.md §9)
+
+Observability (``repro.obs``, DESIGN.md §10) threads through all of it:
+``StreamConfig(obs=ObsPolicy(...))`` turns on nested-span tracing,
+the metrics registry, and per-reducer SkewScope telemetry; the
+``ObsPolicy`` re-export here keeps engine construction one import.
 """
+from repro.obs import Observability, ObsPolicy  # noqa: F401  (re-export)
+
 from .admission import (
     AdmissionController,
     AdmissionDecision,
@@ -70,6 +77,8 @@ __all__ = [
     "FAILED",
     "FairShareController",
     "MultiQueryEngine",
+    "Observability",
+    "ObsPolicy",
     "QUARANTINED",
     "RUNNING",
     "TenancyPolicy",

@@ -45,6 +45,13 @@ class DriftDecision:
     baseline_comm: float  # per-batch comm at install time
     worst_load: float  # worst predicted per-reducer load (tuples)
     worst_value: int | None  # the value predicting that load
+    # machine-readable trigger (DESIGN.md §10): which check fired and the
+    # observed-vs-threshold pair behind it.  "" / 0 / 0 when no check fired;
+    # kept even when cooldown suppresses the replan, so telemetry can tell
+    # "nothing drifted" apart from "drifted but still cooling down".
+    trigger: str = ""  # "overload" | "comm" | "faded_pin" | ""
+    observed: float = 0.0  # the quantity that crossed
+    threshold: float = 0.0  # the value it crossed
 
 
 def plan_comm_on_batch(
@@ -137,12 +144,16 @@ class DriftMonitor:
         )
         self._since_replan += 1
         reason = ""
+        trigger = ""
+        observed = threshold = 0.0
         faded = [
             (a, v, r)
             for (a, v), r in (pinned_rates or {}).items()
             if r < self.fade_factor * self.q
         ]
         if worst_load > self.load_factor * self.q:
+            trigger = "overload"
+            observed, threshold = worst_load, self.load_factor * self.q
             reason = (
                 f"overload: value {worst_value} predicts per-reducer load "
                 f"{worst_load:.0f} > {self.load_factor:g}*q"
@@ -151,12 +162,16 @@ class DriftMonitor:
             # a zero baseline (plan installed against an empty/near-empty
             # batch) must not disable the trigger: any real traffic on such
             # a degenerate plan is comm drift
+            trigger = "comm"
+            observed, threshold = comm, self.comm_factor * self._baseline_comm
             reason = (
                 f"comm: predicted {comm:.0f} > {self.comm_factor:g}x "
                 f"install baseline {self._baseline_comm:.0f}"
             )
         elif faded:
             a, v, r = faded[0]
+            trigger = "faded_pin"
+            observed, threshold = r, self.fade_factor * self.q
             reason = (
                 f"faded pin: {a}={v} rate {r:.1f} < {self.fade_factor:g}*q; "
                 "its residual replicates for a value the stream moved past"
@@ -169,6 +184,9 @@ class DriftMonitor:
             baseline_comm=self._baseline_comm,
             worst_load=worst_load,
             worst_value=worst_value,
+            trigger=trigger,
+            observed=observed,
+            threshold=threshold,
         )
 
     # ---- checkpoint (DESIGN.md §8) -----------------------------------------

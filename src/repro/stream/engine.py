@@ -74,6 +74,7 @@ from repro.mapreduce.local_join import (
     local_join_count_checksum_jit,
 )
 from repro.mapreduce.straggler import FailureDetector
+from repro.obs import NULL_OBS, Observability, ObsPolicy, cms_window_error, hh_hit_counts
 
 from .admission import AdmissionController, AdmissionPolicy
 from .delta import SortedDeltaIndex
@@ -83,6 +84,7 @@ from .recovery import (
     RecoveryExhaustedError,
     RecoveryPolicy,
     RecoveryReport,
+    record_recovery,
 )
 from .retention import (
     RetentionPolicy,
@@ -138,6 +140,9 @@ class StreamConfig:
     # hosts, host loss is detected by heartbeat deadline and recovered by
     # lineage replay / plan repair at batch boundaries.
     recovery: RecoveryPolicy = RecoveryPolicy()
+    # Observability (DESIGN.md §10): spans, metrics, per-reducer load
+    # telemetry.  All off by default — disabled hooks are free.
+    obs: ObsPolicy = ObsPolicy()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +171,16 @@ class BatchReport:
     window_checksum: int  # retention is off)
     carried_tuples: int  # retained emissions across all reducers/relations
     max_carried: int  # worst per-reducer retained occupancy
+    # drift-trigger telemetry (DESIGN.md §10): which drift check fired the
+    # replan and the observed-vs-threshold pair behind it.  "initial" for
+    # the first plan; "" when this batch did not replan.
+    drift_trigger: str = ""
+    drift_observed: float = 0.0
+    drift_threshold: float = 0.0
+    # observability payload (metrics snapshot + skew snapshot) — excluded
+    # from equality: histogram sums carry wall time, and the baseline-vs-
+    # fused parity assertions compare everything else bit-for-bit
+    obs: dict | None = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def total_comm(self) -> int:
@@ -219,10 +234,21 @@ class StreamingJoinEngine:
         config: StreamConfig,
         log_fn: Callable[[str], None] | None = None,
         clock: Callable[[], float] | None = None,
+        obs: Observability | None = None,
     ):
         self.query = query
         self.config = config
         self.spec = LocalJoinSpec.from_query(query)
+        # observability facade: an injected one (MultiQueryEngine hands each
+        # tenant a labeled view of SHARED tracer+registry) wins; otherwise
+        # built from config.obs; NULL_OBS keeps every hook free when off
+        arities = {r.name: r.arity for r in query.relations}
+        if obs is not None:
+            self.obs = obs
+        elif config.obs.any:
+            self.obs = Observability(config.obs, arities=arities)
+        else:
+            self.obs = NULL_OBS
         self.tracker = StreamHHTracker(
             query,
             width=config.sketch_width,
@@ -609,6 +635,9 @@ class StreamingJoinEngine:
         expiry never needs its own shuffle or re-route."""
         keep_log = self.config.retention.enabled
         self._loads = np.zeros(self.plan.total_reducers, dtype=np.int64)
+        skew = self.obs.skew
+        if skew is not None:  # mirror of the _loads reset: new reducer space
+            skew.install(self.plan.total_reducers)
         self._routed_log = {r.name: [] for r in self.query.relations}
         if self._delta_index is not None:
             for nm in self.spec.rel_names:
@@ -616,16 +645,26 @@ class StreamingJoinEngine:
         for rel in self.query.relations:
             self._state[rel.name] = self._empty_state(rel.arity)
         total = 0
+        first_route = True
         for i, bid in enumerate(self._retained_ids):
             for rel in self.query.relations:
                 nm = rel.name
-                routed = self._route_any(rel, self._history[nm][i])
+                if first_route:
+                    # the first kernel invocation under the new plan pays
+                    # any jit (re)compile — clock it apart from migration
+                    with self.obs.span("replan.compile", args={"rel": nm}):
+                        routed = self._route_any(rel, self._history[nm][i])
+                    first_route = False
+                else:
+                    routed = self._route_any(rel, self._history[nm][i])
                 self._state[nm] = self._scatter_any(self._state[nm], routed)
                 if keep_log:
                     self._routed_log[nm].append(routed)
                 if self._delta_index is not None:
                     self._delta_index.append(nm, routed.dest, routed.rows, bid)
                 self._loads += routed.counts
+                if skew is not None:
+                    skew.record(nm, routed.counts)
                 total += int(routed.dest.size)
         return total
 
@@ -635,7 +674,10 @@ class StreamingJoinEngine:
         self.plan = plan
         self.plan_epoch += 1
         self.monitor.install(plan, self.query, batch)
-        migrated = self._rebuild_routed_state()
+        with self.obs.span(
+            "replan.migrate", args={"epoch": self.plan_epoch}
+        ):
+            migrated = self._rebuild_routed_state()
         self.total_migrated += migrated
         if self._hosts is not None:
             self._hosts.assign(plan.total_reducers)
@@ -864,6 +906,11 @@ class StreamingJoinEngine:
         correct plan — explicit, never a silent wrong answer."""
         policy = self.config.recovery
         hosts = self._hosts
+        self.obs.instant(
+            "recovery.detect",
+            cat="recovery",
+            args={"hosts": sorted(lost_hosts), "batch": bid},
+        )
         lost_ids = hosts.reducers_on(lost_hosts)
         hosts.declare_lost(lost_hosts)
         for h in lost_hosts:
@@ -889,7 +936,12 @@ class StreamingJoinEngine:
         elif not degrade:
             mode = "replay"
             hosts.reassign(lost_ids)
-            replayed = self._replay_lost(lost_ids)
+            with self.obs.span(
+                "recovery.replay",
+                cat="recovery",
+                args={"lost_reducers": int(lost_ids.size)},
+            ):
+                replayed = self._replay_lost(lost_ids)
         else:
             mode = "degrade"
             from repro.train.elastic import plan_mesh_shape
@@ -907,12 +959,18 @@ class StreamingJoinEngine:
             # full rebuild under the repaired plan reconstructs every
             # reducer's state (lost bins included) and re-places reducers
             # over the survivors; admission tightens to surviving capacity
-            migrated = self._install(repaired, self._last_batch())
+            with self.obs.span(
+                "recovery.repair",
+                cat="recovery",
+                args={"k_target": k_target, "survivors": survivors},
+            ):
+                migrated = self._install(repaired, self._last_batch())
             if self._controller is not None:
                 self._controller.set_capacity(survivors / hosts.provisioned)
         verified = True
         if policy.verify and self.plan is not None:
-            cnt, chk = self._state_join_fingerprint()
+            with self.obs.span("recovery.verify", cat="recovery"):
+                cnt, chk = self._state_join_fingerprint()
             verified = (
                 cnt == self.window_count and chk == self.window_checksum
             )
@@ -941,6 +999,7 @@ class StreamingJoinEngine:
         )
         self.recoveries.append(report)
         self.total_replayed += replayed
+        record_recovery(self.obs, report)
         self._resolve_host_events(lost_hosts, recovered=True)
         self._log(
             f"[stream] recovered from loss of host(s) {sorted(lost_hosts)} "
@@ -1092,7 +1151,71 @@ class StreamingJoinEngine:
         (empty backlog, nothing deferred or shed); a throttled tenant's
         sketch must see its own admitted subset, so it falls back to a
         private pass.
+
+        With ``config.obs`` enabled (DESIGN.md §10) the batch runs under a
+        root ``ingest`` span with the lifecycle phases nested inside, the
+        per-batch metrics land in the shared registry, and the returned
+        report's ``obs`` field carries the post-batch metrics + skew
+        snapshots (compare-excluded; the deterministic fields still take
+        part in the baseline-vs-fused parity assertions).
         """
+        obs = self.obs
+        obs.tracer.set_batch(len(self.reports))
+        t0 = time.perf_counter()
+        with obs.span("ingest", args={"tenant": self.tenant} if obs.tracer.enabled else None):
+            report = self._ingest_inner(batch, shared_deltas)
+        if obs.metrics.enabled or obs.skew is not None:
+            if obs.metrics.enabled:
+                self._record_batch_metrics(report, time.perf_counter() - t0)
+            payload: dict = {}
+            if obs.metrics.enabled:
+                payload["metrics"] = obs.metrics.snapshot()
+            if obs.skew is not None:
+                payload["skew"] = obs.skew.snapshot().as_dict()
+            report = dataclasses.replace(report, obs=payload)
+            self.reports[-1] = report
+        return report
+
+    def _record_batch_metrics(self, report: BatchReport, seconds: float) -> None:
+        """Fold one finished batch into the metrics registry (tenant label
+        injected by the facade when this engine is a tenant view)."""
+        obs = self.obs
+        obs.counter("stream_batches_total").inc()
+        obs.counter("stream_results_total").inc(report.delta_count)
+        for rel in self.query.relations:
+            n = report.comm_tuples.get(rel.name, 0)
+            obs.counter("stream_comm_tuples_total", rel=rel.name).inc(n)
+            # int32 rows: every shipped cell is 4 bytes (obs.skewscope)
+            obs.counter("stream_comm_bytes_total", rel=rel.name).inc(
+                n * rel.arity * 4
+            )
+        for nm, n in report.shed.items():
+            if n:
+                obs.counter("stream_shed_rows_total", rel=nm).inc(n)
+        for nm, n in report.deferred.items():
+            obs.gauge("stream_deferred_rows", rel=nm).set(n)
+        if report.replanned:
+            obs.counter(
+                "stream_replan_total",
+                trigger=report.drift_trigger or "initial",
+            ).inc()
+        if report.migrated_tuples:
+            obs.counter("stream_migrated_tuples_total").inc(report.migrated_tuples)
+        if report.expired_batches:
+            obs.counter("stream_expired_batches_total").inc(report.expired_batches)
+        if report.retracted_count:
+            obs.counter("stream_retracted_results_total").inc(report.retracted_count)
+        obs.gauge("stream_window_batches").set(len(self._retained_ids))
+        obs.gauge("stream_carried_tuples").set(report.carried_tuples)
+        obs.gauge("stream_max_load").set(report.max_load)
+        obs.gauge("stream_plan_epoch").set(report.plan_epoch)
+        obs.histogram("stream_batch_seconds").observe(seconds)
+
+    def _ingest_inner(
+        self,
+        batch: dict[str, np.ndarray],
+        shared_deltas: dict[tuple[str, str], np.ndarray] | None,
+    ) -> BatchReport:
         if self._exhausted:
             raise RecoveryExhaustedError(
                 "engine lost more hosts than the survivable grid; carried "
@@ -1107,16 +1230,18 @@ class StreamingJoinEngine:
         # 0. recovery boundary: heal partitions, fire scheduled host
         #    faults, detect and recover losses BEFORE the batch joins
         if self._hosts is not None:
-            self._host_boundary(len(self.reports))
+            with self.obs.span("recovery.boundary", cat="recovery"):
+                self._host_boundary(len(self.reports))
 
         # 1. admission: backlog + batch against the live budget
         if self._controller is not None:
             backlog_empty = all(
                 arr.shape[0] == 0 for arr in self._controller.backlog.values()
             )
-            admitted, decision = self._controller.admit(
-                offered, self.plan, self._concentration()
-            )
+            with self.obs.span("admission"):
+                admitted, decision = self._controller.admit(
+                    offered, self.plan, self._concentration()
+                )
             deferred, shed = decision.deferred, decision.shed
             pristine = (
                 backlog_empty
@@ -1144,7 +1269,8 @@ class StreamingJoinEngine:
 
         # 2. retention: retire batches that left the window BEFORE this one
         #    joins, so new tuples only meet retained partners
-        expired_n, retracted = self._expire_due(now)
+        with self.obs.span("retention.expire"):
+            expired_n, retracted = self._expire_due(now)
 
         # speculative routing under the plan that was live when the batch
         # arrived; discarded (and redone) only if this batch triggers a
@@ -1161,32 +1287,39 @@ class StreamingJoinEngine:
             }
             if self.config.fused_ingest:
                 has_plan = self.plan is not None
-                for rel in self.query.relations:
-                    routed, _ = self._fused_pass(
-                        rel, batch[rel.name], with_route=has_plan,
-                        with_sketch=False,
-                    )
-                    if routed is not None:
-                        spec_routes[rel.name] = routed
+                with self.obs.span("route.fused"):
+                    for rel in self.query.relations:
+                        routed, _ = self._fused_pass(
+                            rel, batch[rel.name], with_route=has_plan,
+                            with_sketch=False,
+                        )
+                        if routed is not None:
+                            spec_routes[rel.name] = routed
                 self.fused_batches += 1
-            self.tracker.observe_absorbed(batch, picked)
+            with self.obs.span("sketch.update", args={"shared": True}):
+                self.tracker.observe_absorbed(batch, picked)
         elif self.config.fused_ingest:
             deltas: dict[tuple[str, str], np.ndarray] = {}
             has_plan = self.plan is not None
-            for rel in self.query.relations:
-                routed, d = self._fused_pass(
-                    rel, batch[rel.name], with_route=has_plan, with_sketch=True
-                )
-                if d is not None:
-                    for a, tbl in d.items():
-                        deltas[(a, rel.name)] = tbl
-                if routed is not None:
-                    spec_routes[rel.name] = routed
-            self.tracker.observe_absorbed(batch, deltas)
+            # route + sketch increment are ONE fused pass per relation
+            # (DESIGN.md §7); the span covers both halves of the taxonomy
+            with self.obs.span("route.fused"):
+                for rel in self.query.relations:
+                    routed, d = self._fused_pass(
+                        rel, batch[rel.name], with_route=has_plan, with_sketch=True
+                    )
+                    if d is not None:
+                        for a, tbl in d.items():
+                            deltas[(a, rel.name)] = tbl
+                    if routed is not None:
+                        spec_routes[rel.name] = routed
+            with self.obs.span("sketch.update"):
+                self.tracker.observe_absorbed(batch, deltas)
             self.fused_batches += 1
             self.sketch_ingest_calls += 1
         else:
-            self.tracker.observe(batch)
+            with self.obs.span("sketch.update"):
+                self.tracker.observe(batch)
             self.sketch_ingest_calls += 1
         snapshot = self.tracker.snapshot(
             self._threshold(), self.config.max_hh_per_attr
@@ -1194,11 +1327,16 @@ class StreamingJoinEngine:
         hh = {a: s.values for a, s in snapshot.items()}
 
         replanned, reason, migrated = False, "", 0
+        trigger, observed, threshold = "", 0.0, 0.0
         if self.plan is None:
-            plan = plan_with_hh(
-                self.query, batch, self.config.q, hh, self.config.max_hh_per_attr
-            )
-            migrated = self._install(plan, batch)
+            trigger = "initial"
+            with self.obs.span("replan", args={"trigger": trigger}):
+                with self.obs.span("replan.solve"):
+                    plan = plan_with_hh(
+                        self.query, batch, self.config.q, hh,
+                        self.config.max_hh_per_attr,
+                    )
+                migrated = self._install(plan, batch)
             replanned, reason = True, "initial plan"
         else:
             pinned_rates = {
@@ -1206,14 +1344,32 @@ class StreamingJoinEngine:
                 for a, vals in self.plan.hh_values.items()
                 for v in np.asarray(vals).tolist()
             }
-            decision: DriftDecision = self.monitor.check(
-                self.plan, self.query, batch, snapshot, pinned_rates
-            )
-            if decision.replan:
-                plan = plan_with_hh(
-                    self.query, batch, self.config.q, hh, self.config.max_hh_per_attr
+            with self.obs.span("drift.check"):
+                decision: DriftDecision = self.monitor.check(
+                    self.plan, self.query, batch, snapshot, pinned_rates
                 )
-                migrated = self._install(plan, batch)
+            if decision.trigger:
+                # recorded even when cooldown suppresses the replan, so the
+                # trace tells "drifted but cooling down" from "no drift"
+                self.obs.instant(
+                    "drift.trigger",
+                    args={
+                        "trigger": decision.trigger,
+                        "observed": decision.observed,
+                        "threshold": decision.threshold,
+                        "replan": decision.replan,
+                    },
+                )
+            if decision.replan:
+                trigger = decision.trigger
+                observed, threshold = decision.observed, decision.threshold
+                with self.obs.span("replan", args={"trigger": trigger}):
+                    with self.obs.span("replan.solve"):
+                        plan = plan_with_hh(
+                            self.query, batch, self.config.q, hh,
+                            self.config.max_hh_per_attr,
+                        )
+                    migrated = self._install(plan, batch)
                 replanned, reason = True, decision.reason
                 self._log(
                     f"[stream] replan epoch={self.plan_epoch} ({reason}); "
@@ -1224,16 +1380,23 @@ class StreamingJoinEngine:
 
         # route the new batch under the (possibly fresh) plan
         new_routed, comm = {}, {}
-        for rel in self.query.relations:
-            routed = spec_routes.get(rel.name)
-            if routed is None:
-                routed = self._route_any(rel, batch[rel.name])
-            new_routed[rel.name] = routed
-            comm[rel.name] = int(routed.dest.size)
-            self._loads += routed.counts
+        skew = self.obs.skew
+        with self.obs.span("route"):
+            for rel in self.query.relations:
+                routed = spec_routes.get(rel.name)
+                if routed is None:
+                    routed = self._route_any(rel, batch[rel.name])
+                new_routed[rel.name] = routed
+                comm[rel.name] = int(routed.dest.size)
+                self._loads += routed.counts
+                if skew is not None:
+                    skew.record(rel.name, routed.counts)
+        if skew is not None:
+            skew.record_hh(*hh_hit_counts(self.query, batch, self.plan.hh_values))
 
         bid = len(self.reports)
-        d_count, d_checksum = self._delta_join(new_routed, bid)
+        with self.obs.span("join.delta"):
+            d_count, d_checksum = self._delta_join(new_routed, bid)
         self.total_count += d_count
         self.total_checksum = (self.total_checksum + d_checksum) & _MASK32
         self.window_count += d_count
@@ -1274,6 +1437,9 @@ class StreamingJoinEngine:
             window_checksum=self.window_checksum,
             carried_tuples=carried,
             max_carried=max_carried,
+            drift_trigger=trigger,
+            drift_observed=observed,
+            drift_threshold=threshold,
         )
         self.reports.append(report)
         self._log(
@@ -1333,6 +1499,24 @@ class StreamingJoinEngine:
     def total_shed(self) -> int:
         return self._controller.total_shed if self._controller else 0
 
+    def skew_report(self):
+        """The SkewScope snapshot with the Count-Min error audit folded in
+        (DESIGN.md §10).  The audit walks the retained window computing
+        decay-weighted exact counts, so it runs on demand here — not per
+        ingest — keeping the per-batch obs cost flat."""
+        skew = self.obs.skew
+        if skew is None:
+            raise RuntimeError(
+                "skewscope is disabled: set StreamConfig.obs = "
+                "ObsPolicy(skewscope=True)"
+            )
+        skew.record_cms_error(
+            cms_window_error(
+                self.tracker, self.query, self._history, self._retained_ids
+            )
+        )
+        return skew.snapshot()
+
     # ---- checkpoint / restore (DESIGN.md §8) -------------------------------
     def save_checkpoint(self, directory: str, keep: int = 3) -> str:
         """Serialize the full engine state through ``train.checkpoint``
@@ -1386,18 +1570,30 @@ class StreamingJoinEngine:
             tree["recovery_blob"] = np.frombuffer(
                 pickle.dumps(self.recoveries), dtype=np.uint8
             ).copy()
-        return _save(
-            directory,
-            step=len(self.reports),
-            tree=tree,
-            keep=keep,
-            metadata={
-                "kind": "stream_engine",
-                "format": CHECKPOINT_FORMAT,
-                "batches": len(self.reports),
-                "retained": len(self._retained_ids),
-            },
-        )
+        with self.obs.span("checkpoint.save"):
+            path = _save(
+                directory,
+                step=len(self.reports),
+                tree=tree,
+                keep=keep,
+                metadata={
+                    "kind": "stream_engine",
+                    "format": CHECKPOINT_FORMAT,
+                    "batches": len(self.reports),
+                    "retained": len(self._retained_ids),
+                },
+            )
+        if self.obs.metrics.enabled:
+            import os
+
+            nbytes = sum(
+                os.path.getsize(os.path.join(dp, f))
+                for dp, _, fs in os.walk(path)
+                for f in fs
+            )
+            self.obs.counter("stream_checkpoints_total").inc()
+            self.obs.counter("stream_checkpoint_bytes_total").inc(nbytes)
+        return path
 
     @classmethod
     def restore(
@@ -1408,6 +1604,7 @@ class StreamingJoinEngine:
         log_fn: Callable[[str], None] | None = None,
         clock: Callable[[], float] | None = None,
         step: int | None = None,
+        obs: Observability | None = None,
     ) -> "StreamingJoinEngine":
         """Rebuild an engine mid-stream from a checkpoint.  ``query`` and
         ``config`` must match the saving engine (sketch shapes/seeds are
@@ -1429,7 +1626,7 @@ class StreamingJoinEngine:
             )
         _, flat = load_checkpoint(directory, step)
 
-        eng = cls(query, config, log_fn=log_fn, clock=clock)
+        eng = cls(query, config, log_fn=log_fn, clock=clock, obs=obs)
         plan, reports = pickle.loads(flat["blob"].tobytes())
         eng.plan = plan
         eng.reports = list(reports)

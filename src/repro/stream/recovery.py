@@ -108,6 +108,37 @@ class RecoveryReport:
     #                   relabels per-query events it aggregates)
 
 
+def record_recovery(obs, report: RecoveryReport) -> None:
+    """Fold one recovery event into the observability registry
+    (DESIGN.md §10).  The facade injects the tenant label for tenant
+    engines; ``NULL_OBS`` makes every call here free when metrics are off.
+    Counter taxonomy: events by mode (replay vs degrade), lineage volume
+    (replayed tuples vs the lost share they reconstruct), repair-migration
+    volume, and a loud counter for failed verifications — which also raise,
+    but a scrape must see them after the process survives."""
+    if obs.tracer.enabled:
+        obs.instant(
+            "recovery.report", cat="recovery", args=dataclasses.asdict(report)
+        )
+    if not obs.metrics.enabled:
+        return
+    obs.counter("stream_recovery_total", mode=report.mode).inc()
+    obs.counter("stream_recovery_lost_reducers_total").inc(report.lost_reducers)
+    obs.counter("stream_recovery_replayed_tuples_total").inc(
+        report.replayed_tuples
+    )
+    obs.counter("stream_recovery_lost_share_tuples_total").inc(
+        report.lost_share_tuples
+    )
+    if report.migrated_tuples:
+        obs.counter("stream_recovery_migrated_tuples_total").inc(
+            report.migrated_tuples
+        )
+    if not report.verified:
+        obs.counter("stream_recovery_verify_failures_total").inc()
+    obs.gauge("stream_hosts_alive").set(report.survivors)
+
+
 class HostTracker:
     """Placement + liveness bookkeeping for the simulated reducer hosts.
 

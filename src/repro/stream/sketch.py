@@ -315,6 +315,23 @@ class StreamHHTracker:
                 self._ss[a].update(col)
         self.batches += 1
 
+    def candidates_of(self, attr: str) -> tuple[np.ndarray, np.ndarray]:
+        """Public view of the SpaceSaving candidate set for ``attr`` —
+        (values, decayed counts), count-descending.  This is the value set
+        planning decisions are made from, and the set ``obs.skewscope``
+        audits the sketch against."""
+        return self._ss[attr].candidates()
+
+    def rate_in(self, attr: str, rel_name: str, values: np.ndarray) -> np.ndarray:
+        """Per-batch rate estimates for ``values`` in ONE relation's
+        sketch.  ``rate_of`` takes the max over relations (the planning
+        view); the CMS-error audit in ``obs.skewscope`` needs the
+        per-relation estimate that exact per-relation counts compare to."""
+        values = np.asarray(values, dtype=np.int64)
+        if values.size == 0:
+            return np.empty(0, np.float64)
+        return self._cms[(attr, rel_name)].rate(values)
+
     def rate_of(self, attr: str, values: np.ndarray) -> np.ndarray:
         """Max per-batch rate over relations containing ``attr``."""
         values = np.asarray(values, dtype=np.int64)

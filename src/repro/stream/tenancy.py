@@ -51,6 +51,7 @@ from typing import Callable, Iterable, Mapping
 import numpy as np
 
 from repro.core.schema import JoinQuery
+from repro.obs import Observability, ObsPolicy
 
 from .admission import FairShareController, replication_width
 from .engine import BatchReport, StreamConfig, StreamingJoinEngine
@@ -97,6 +98,12 @@ class TenancyPolicy:
     breaker_backoff: int = 1  # quarantine length after the 1st failure
     #                           (doubles per consecutive failure)
     breaker_max_reopens: int = 3  # reopen attempts before FAILED
+    # Observability (DESIGN.md §10): ONE tracer + metrics registry shared
+    # by all tenants; each tenant engine gets a label-injecting view, so
+    # the same metric name yields per-tenant isolated series.  A tenant's
+    # own ``StreamConfig.obs`` is ignored under a MultiQueryEngine — the
+    # shared facade wins (injected obs takes precedence in the engine).
+    obs: ObsPolicy = ObsPolicy()
 
     def __post_init__(self):
         if self.breaker_backoff < 1:
@@ -158,10 +165,18 @@ class MultiQueryEngine:
             raise ValueError(f"duplicate tenant names: {sorted(names)}")
         self.policy = policy
         self._log = log_fn or (lambda _msg: None)
+        self.obs = Observability(policy.obs)  # shared tracer + registry
         self._tenants: dict[str, _Tenant] = {}
         for spec in specs:
             engine = StreamingJoinEngine(
-                spec.query, spec.config, log_fn=log_fn, clock=clock
+                spec.query,
+                spec.config,
+                log_fn=log_fn,
+                clock=clock,
+                obs=self.obs.for_tenant(
+                    spec.name,
+                    arities={r.name: r.arity for r in spec.query.relations},
+                ),
             )
             engine.tenant = spec.name
             self._tenants[spec.name] = _Tenant(spec, engine)
@@ -213,6 +228,8 @@ class MultiQueryEngine:
                     rows[:, col_idx], seeds, width
                 )
                 self.shared_sketch_passes += 1
+                if self.obs.metrics.enabled:
+                    self.obs.counter("tenancy_shared_sketch_passes_total").inc()
             for name in members:
                 per_tenant[name] = deltas
         return per_tenant
@@ -246,6 +263,21 @@ class MultiQueryEngine:
         return out, dropped
 
     # ---- circuit breaker ---------------------------------------------------
+    def _state_event(self, name: str, to_state: str, bid: int) -> None:
+        """One breaker/lifecycle transition into the shared registry + trace
+        (DESIGN.md §10).  Labeled (tenant, to), so a scrape sees each
+        tenant's transition history as its own series."""
+        if self.obs.metrics.enabled:
+            self.obs.counter(
+                "tenancy_breaker_transitions_total", tenant=name, to=to_state
+            ).inc()
+        if self.obs.tracer.enabled:
+            self.obs.instant(
+                "tenant.state",
+                cat="tenancy",
+                args={"tenant": name, "to": to_state, "batch": bid},
+            )
+
     def _trip(self, t: _Tenant, bid: int, err: BaseException) -> None:
         """One breaker trip: quarantine with exponential backoff, or FAIL
         permanently once the reopen budget is spent."""
@@ -253,6 +285,7 @@ class MultiQueryEngine:
         t.last_error = f"{type(err).__name__}: {err}"
         if t.reopens >= self.policy.breaker_max_reopens:
             t.state = FAILED
+            self._state_event(t.spec.name, FAILED, bid)
             self._log(
                 f"[tenancy] {t.spec.name} FAILED at batch {bid}: reopen "
                 f"budget spent after {t.failures} failure(s) ({t.last_error})"
@@ -261,6 +294,7 @@ class MultiQueryEngine:
         backoff = self.policy.breaker_backoff * (2 ** (t.failures - 1))
         t.state = QUARANTINED
         t.quarantined_until = bid + 1 + backoff
+        self._state_event(t.spec.name, QUARANTINED, bid)
         self._log(
             f"[tenancy] {t.spec.name} QUARANTINED at batch {bid} for "
             f"{backoff} batch(es) ({t.last_error})"
@@ -270,6 +304,7 @@ class MultiQueryEngine:
         if t.state == QUARANTINED and bid >= t.quarantined_until:
             t.reopens += 1
             t.state = RUNNING
+            self._state_event(t.spec.name, RUNNING, bid)
             self._log(
                 f"[tenancy] {t.spec.name} breaker half-open at batch {bid} "
                 f"(reopen {t.reopens}/{self.policy.breaker_max_reopens})"
@@ -322,9 +357,20 @@ class MultiQueryEngine:
         for t in serving:
             nm = t.spec.name
             views[nm], dropped = self._trim(views[nm], fractions.get(nm, 1.0))
+            if self.obs.metrics.enabled:
+                self.obs.gauge("tenancy_fair_fraction", tenant=nm).set(
+                    fractions.get(nm, 1.0)
+                )
+                self.obs.gauge("tenancy_demand_rows", tenant=nm).set(
+                    demands.get(nm, 0.0)
+                )
             if dropped:
                 self.fair.record_trim(nm, dropped)
                 clean[nm] = False  # admitted view != shared batch
+                if self.obs.metrics.enabled:
+                    self.obs.counter(
+                        "tenancy_overload_shed_rows_total", tenant=nm
+                    ).inc(dropped)
                 self._log(
                     f"[tenancy] {nm} overload-shed {dropped} row(s) at "
                     f"batch {bid} (fair share {fractions[nm]:.3f})"
@@ -349,9 +395,11 @@ class MultiQueryEngine:
                     r.mode == "degrade" for r in t.engine.recoveries
                 ):
                     t.state = DEGRADED
+                    self._state_event(nm, DEGRADED, bid)
             except RecoveryExhaustedError as err:
                 t.state = FAILED
                 t.last_error = f"{type(err).__name__}: {err}"
+                self._state_event(nm, FAILED, bid)
                 self._log(
                     f"[tenancy] {nm} FAILED at batch {bid}: {t.last_error}"
                 )
@@ -400,10 +448,12 @@ class MultiQueryEngine:
                 r.mode == "degrade" for r in t.engine.recoveries
             ):
                 t.state = DEGRADED
+                self._state_event(tenant, DEGRADED, self.batches)
             return report
         except RecoveryExhaustedError as err:
             t.state = FAILED
             t.last_error = f"{type(err).__name__}: {err}"
+            self._state_event(tenant, FAILED, self.batches)
             self._log(f"[tenancy] {tenant} FAILED on host kill: {t.last_error}")
             return None
 
@@ -501,6 +551,7 @@ class MultiQueryEngine:
         out = cls.__new__(cls)
         out.policy = policy
         out._log = log_fn or (lambda _msg: None)
+        out.obs = Observability(policy.obs)  # fresh shared tracer+registry
         out._tenants = {}
         for spec in specs:
             engine = StreamingJoinEngine.restore(
@@ -509,6 +560,10 @@ class MultiQueryEngine:
                 spec.config,
                 log_fn=log_fn,
                 clock=clock,
+                obs=out.obs.for_tenant(
+                    spec.name,
+                    arities={r.name: r.arity for r in spec.query.relations},
+                ),
             )
             engine.tenant = spec.name
             out._tenants[spec.name] = _Tenant(spec, engine)
